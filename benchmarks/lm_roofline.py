@@ -1,0 +1,37 @@
+"""LM roofline benchmark: emit the 40-cell dry-run table as CSV rows.
+
+Reads benchmarks/results/dryrun.json (produced by
+``python -m repro.launch.dryrun``); each row's ``us_per_call`` is the
+roofline step-time lower bound (max of the three terms) and ``derived`` is
+the roofline fraction (compute term / dominant term).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def lm_roofline():
+    rows, detail = [], {}
+    if not os.path.exists(RESULTS):
+        return [("lm_roofline_missing", 0.0, 0.0)], {
+            "note": "run PYTHONPATH=src python -m repro.launch.dryrun first"}
+    with open(RESULTS) as f:
+        recs = json.load(f)
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        if r["status"] == "skipped":
+            n_skip += 1
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            continue
+        n_ok += 1
+        lb = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        frac = r["t_compute_s"] / lb if lb else 0.0
+        name = f"roofline_{r['kind']}_{r['arch']}_{r['cell']}_{r['mesh']}"
+        rows.append((name, lb * 1e6, round(frac, 4)))
+    detail["summary"] = {"ok": n_ok, "skipped": n_skip, "errors": n_err}
+    return rows, detail

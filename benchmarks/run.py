@@ -1,0 +1,50 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV and writes full validation detail to
+benchmarks/results/paper_validation.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from benchmarks.paper_figs import (fig01_roofline, fig10_speedup,  # noqa: E402
+                                   fig11_energy, fig12_gpu, fig13_pims,
+                                   fig14_mapping, stencil_wallclock,
+                                   table4_instructions)
+from benchmarks.lm_roofline import lm_roofline  # noqa: E402
+from benchmarks.stencil_cluster import stencil_cluster_mapping  # noqa: E402
+
+BENCHES = (
+    fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu, fig13_pims,
+    fig14_mapping, table4_instructions, stencil_wallclock, lm_roofline,
+    stencil_cluster_mapping,
+)
+
+
+def main() -> None:
+    out_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+    os.makedirs(out_dir, exist_ok=True)
+    all_detail = {}
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        rows, detail = bench()
+        all_detail[bench.__name__] = detail
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}")
+    with open(os.path.join(out_dir, "paper_validation.json"), "w") as f:
+        json.dump(all_detail, f, indent=1, default=float)
+    summaries = {k: v.get("summary") for k, v in all_detail.items()
+                 if isinstance(v, dict) and v.get("summary")}
+    print("# --- summaries ---", file=sys.stderr)
+    for k, v in summaries.items():
+        print(f"# {k}: {json.dumps(v, default=float)}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Cluster-scale data-mapping ablation (the paper's Fig. 14 lesson on the
+TPU mesh): block-contiguous 2-D shards vs innermost-dim "sliver" shards of
+the same grid on 256 devices.
+
+Casper §4.2 chooses block shapes so neighboring points share a slice and
+remote traffic only crosses block boundaries; at cluster scale the analogue
+is the halo surface-to-volume ratio of the shard.  A (512, 512) block has
+4x512-element halos; an (8192, 32) sliver has 2x8192-element halos — the
+measured collective-permute wire bytes quantify it from the compiled HLO.
+
+Runs in a subprocess (needs 256 forced host devices).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import PAPER_STENCILS, distributed_stencil_fn
+    from repro.roofline import hlo_walk
+
+    out = {}
+    for name in ("jacobi2d", "blur2d"):
+        spec = PAPER_STENCILS[name]
+        shape = (8192, 8192)
+        for layout, mesh_shape, axes in (
+                ("blocked", (16, 16), ("sx", "sy")),
+                ("sliver", (1, 256), ("sx", "sy"))):
+            mesh = jax.make_mesh(mesh_shape, ("sx", "sy"))
+            fn = distributed_stencil_fn(spec, mesh, list(axes), iters=2)
+            x = jax.ShapeDtypeStruct(
+                shape, jnp.float32,
+                sharding=NamedSharding(mesh, P(*axes)))
+            compiled = fn.lower(x).compile()
+            t = hlo_walk.walk(compiled.as_text(), 256)
+            out[f"{name}/{layout}"] = {
+                "halo_wire_bytes_per_device": t.collective_wire_bytes,
+                "bytes_per_device": t.bytes,
+            }
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def stencil_cluster_mapping():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    try:
+        proc = subprocess.run([sys.executable, "-c", _CODE],
+                              capture_output=True, text=True, env=env,
+                              timeout=900)
+        line = next(l for l in proc.stdout.splitlines()
+                    if l.startswith("RESULT"))
+        data = json.loads(line[len("RESULT"):])
+    except Exception as e:  # pragma: no cover
+        return [("stencil_cluster_mapping_error", 0.0, 0.0)], {
+            "error": str(e)}
+    rows, detail = [], {}
+    for name in ("jacobi2d", "blur2d"):
+        blk = data[f"{name}/blocked"]["halo_wire_bytes_per_device"]
+        slv = data[f"{name}/sliver"]["halo_wire_bytes_per_device"]
+        ratio = slv / max(blk, 1.0)
+        rows.append((f"stencil_cluster_halo_{name}_blocked", 0.0, blk))
+        rows.append((f"stencil_cluster_halo_{name}_sliver", 0.0, slv))
+        detail[name] = {"blocked_halo_bytes": blk, "sliver_halo_bytes": slv,
+                        "sliver_over_blocked": ratio}
+    detail["summary"] = {
+        "mean_sliver_penalty": sum(d["sliver_over_blocked"]
+                                   for d in detail.values()
+                                   if isinstance(d, dict)
+                                   and "sliver_over_blocked" in d) / 2,
+        "paper_analogue": "Fig. 14: blocked mapping cuts remote accesses",
+    }
+    return rows, detail

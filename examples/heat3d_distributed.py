@@ -1,0 +1,54 @@
+"""Distributed 3-D heat diffusion: block-contiguous sharding + halo exchange.
+
+The cluster-scale version of Casper's stencil segment (DESIGN.md §2): each
+device owns a contiguous block of the grid; only halo surfaces move over the
+interconnect (`collective_permute`).  Runs on 8 forced host devices so it
+works on any CPU box:
+
+    PYTHONPATH=src python examples/heat3d_distributed.py
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np                      # noqa: E402
+import jax                              # noqa: E402
+import jax.numpy as jnp                 # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import heat3d, distributed_stencil_fn, run_iterations  # noqa: E402
+
+
+def main():
+    spec = heat3d()
+    mesh = jax.make_mesh((4, 2), ("sx", "sy"))
+    print(f"devices: {len(jax.devices())}  mesh: {dict(mesh.shape)}")
+
+    shape = (64, 64, 32)
+    rng = np.random.default_rng(0)
+    grid = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    grid = jax.device_put(grid, NamedSharding(mesh, P("sx", "sy", None)))
+
+    iters = 20
+    step = distributed_stencil_fn(spec, mesh, ("sx", "sy", None),
+                                  iters=iters)
+    out = step(grid)
+    want = run_iterations(spec, jnp.asarray(np.asarray(grid)), iters)
+    err = float(jnp.max(jnp.abs(out - want)))
+    print(f"{iters} sweeps over {shape}: max err vs single-device oracle "
+          f"{err:.2e}")
+    assert err < 1e-4
+
+    # inspect the halo traffic in the compiled program
+    lowered = step.lower(jax.ShapeDtypeStruct(
+        shape, jnp.float32, sharding=NamedSharding(mesh, P("sx", "sy",
+                                                           None))))
+    txt = lowered.compile().as_text()
+    n_perm = txt.count("collective-permute(")
+    print(f"collective-permute ops in compiled HLO: {n_perm} "
+          f"(halo exchanges only — no data re-layout)")
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batched serving demo: prefill once, decode with donated KV caches.
+
+Loads (or trains briefly) a small gemma2-family model — exercising the
+local/global alternating attention and softcaps — then serves a batch of
+prompts with greedy decoding, verifying prefix consistency.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import make_arch
+from repro.models.common import init_params
+from repro.serve import ServeEngine
+from repro.sharding import ShardCtx
+
+
+def main():
+    cfg = get_config("gemma2-27b", reduced=True)
+    arch = make_arch(cfg)
+    params = init_params(jax.random.PRNGKey(0), arch.param_specs(cfg))
+
+    engine = ServeEngine(arch, params, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (4, 12)), jnp.int32)
+
+    toks = engine.generate({"tokens": prompts}, n_tokens=16)
+    print("batch of 4 prompts -> 16 greedy tokens each:")
+    for i, row in enumerate(np.asarray(toks)):
+        print(f"  req{i}: {row.tolist()}")
+
+    # consistency: decoding is deterministic given the prefix
+    toks2 = engine.generate({"tokens": prompts}, n_tokens=16)
+    assert np.array_equal(np.asarray(toks), np.asarray(toks2))
+    print("deterministic decode: ok")
+
+    # teacher-forcing check: step logits == prefill logits
+    ctx = ShardCtx(None)
+    full = jnp.concatenate([prompts, toks[:, :1]], axis=1)
+    cache, ln, _ = arch.prefill(params, {"tokens": prompts}, cfg, ctx,
+                                max_len=64)
+    _, _, step_logits = arch.decode(params, cache, ln, toks[:, :1], cfg, ctx)
+    _, _, ref_logits = arch.prefill(params, {"tokens": full}, cfg, ctx,
+                                    max_len=64)
+    err = float(jnp.max(jnp.abs(step_logits[:, -1] - ref_logits[:, -1])))
+    print(f"decode-vs-prefill logit err: {err:.2e}")
+    assert err < 5e-2
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~110M-parameter LM for a few hundred steps.
+
+Uses the full production stack — config, registry, AdamW, async sharded
+checkpointing, stateless data, fault-tolerant trainer — on a llama-family
+config sized to run on this CPU container.  The loss on the structured
+synthetic stream (periodic copy task with 10% corruption) drops well below
+the uniform-vocabulary entropy within a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import math
+
+from repro.data.synthetic import DataConfig
+from repro.models import make_arch
+from repro.models.common import param_count
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainLoopConfig
+
+
+def lm110m() -> ModelConfig:
+    """Llama-family ~110M config (same code path as the yi-9b arch)."""
+    return ModelConfig(
+        arch="lm110m-demo", family="dense",
+        n_layers=8, d_model=640, n_heads=10, n_kv=5, d_head=64,
+        d_ff=1792, vocab=32768, act="swiglu", rope_theta=10000.0,
+        attn_impl="dense", max_seq=128)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = lm110m()
+    arch = make_arch(cfg)
+    n = param_count(arch.param_specs(cfg))
+    print(f"model: {cfg.arch}  params={n/1e6:.1f}M")
+
+    opt = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps,
+                      weight_decay=0.1)
+    loop = TrainLoopConfig(total_steps=args.steps, ckpt_every=100,
+                           ckpt_dir=args.ckpt_dir, log_every=10)
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=0)
+    tr = Trainer(arch, opt, loop, data_cfg=data)
+    history = tr.run()
+
+    uniform = math.log(cfg.vocab)
+    print(f"\nuniform-entropy baseline: {uniform:.2f}")
+    for h in history:
+        print(f"step {h['step']:4d}  loss {h['loss']:.3f}  "
+              f"lr {h['lr']:.2e}  {h['step_seconds']*1e3:.0f} ms")
+    final = history[-1]["loss"]
+    print(f"\nfinal loss {final:.3f} "
+          f"({'LEARNED' if final < uniform - 2 else 'still early'}; "
+          f"resume any time — checkpoints in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

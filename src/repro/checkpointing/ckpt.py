@@ -1,0 +1,187 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest, async save,
+any-mesh restore.
+
+Layout:  <dir>/step_<N>/
+             manifest.json     tree structure, shapes, dtypes, file map, hash
+             shard_<k>.npz     flat leaves (chunked to cap file size)
+             COMMIT            written last; a step without COMMIT is partial
+                               and is skipped on restore (torn-write safety)
+
+Arrays are stored logically-global, so a job can restart on a different mesh
+(elastic rescale): restore just re-shards on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SHARD_BYTES = 1 << 30
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    paths = [jax.tree_util.keystr(k) for k, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Synchronous save; returns the step directory."""
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    paths, leaves, _ = _flatten_with_paths(tree)
+    arrays = [np.asarray(jax.device_get(x)) for x in leaves]
+
+    manifest = {"step": step, "leaves": [], "files": []}
+    shard, shard_bytes, shard_idx = {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_idx
+        if not shard:
+            return
+        fname = f"shard_{shard_idx}.npz"
+        np.savez(os.path.join(tmp_dir, fname), **shard)
+        manifest["files"].append(fname)
+        shard, shard_bytes = {}, 0
+        shard_idx += 1
+
+    for i, (p, a) in enumerate(zip(paths, arrays)):
+        key = f"leaf_{i}"
+        manifest["leaves"].append({
+            "path": p, "key": key, "file_index": shard_idx,
+            "shape": list(a.shape), "dtype": str(a.dtype),
+            "crc": hashlib.sha1(a.tobytes()).hexdigest()[:16],
+        })
+        shard[key] = a
+        shard_bytes += a.nbytes
+        if shard_bytes >= _SHARD_BYTES:
+            flush()
+    flush()
+
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp_dir, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.replace(tmp_dir, step_dir)
+    return step_dir
+
+
+def latest_step(directory: str) -> int | None:
+    """Largest step with a COMMIT marker; partial saves are ignored."""
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if not os.path.exists(os.path.join(directory, name, "COMMIT")):
+            continue
+        try:
+            s = int(name.split("_")[1])
+        except ValueError:
+            continue
+        best = s if best is None or s > best else best
+    return best
+
+
+def restore_checkpoint(directory: str, step: int, like: Any,
+                       shardings: Any = None, verify: bool = True) -> Any:
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs).
+
+    ``shardings``: optional matching tree of NamedShardings — arrays are
+    placed sharded (any-mesh restore).
+    """
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    paths, leaves, treedef = _flatten_with_paths(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    file_cache: dict[str, Any] = {}
+
+    sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                 else [None] * len(leaves))
+
+    out = []
+    for p, ref, sh in zip(paths, leaves, sh_leaves):
+        e = by_path.get(p)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {p}")
+        fname = manifest["files"][e["file_index"]]
+        if fname not in file_cache:
+            file_cache[fname] = np.load(os.path.join(step_dir, fname))
+        a = file_cache[fname][e["key"]]
+        if a.dtype.kind == "V":
+            # npz stores ml_dtypes (bfloat16, fp8) as raw void; view back.
+            a = a.view(np.dtype(e["dtype"]))
+        if verify:
+            crc = hashlib.sha1(a.tobytes()).hexdigest()[:16]
+            if crc != e["crc"]:
+                raise IOError(f"checksum mismatch for {p} in {step_dir}")
+        if list(a.shape) != list(ref.shape):
+            raise ValueError(f"shape mismatch for {p}: ckpt {a.shape} vs "
+                             f"expected {ref.shape}")
+        if a.dtype != ref.dtype:
+            a = a.astype(ref.dtype)
+        out.append(jax.device_put(a, sh) if sh is not None
+                   else jnp.asarray(a))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async double-buffered saves + retention + auto-resume."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        # materialize on host before handing to the writer thread
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.directory, n, "COMMIT")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, restore_checkpoint(self.directory, step, like,
+                                        shardings)

@@ -1,0 +1,79 @@
+"""CasperEngine: the user-facing stencil runtime.
+
+Composes the pieces the way the paper's API (Table 1) does:
+
+    engine = CasperEngine(jacobi2d(), backend="pallas")
+    out    = engine.run(grid, iters=100)        # single host/device
+    step   = engine.distributed_fn(mesh, ("sx", "sy"))   # multi-device
+
+The assembled Casper program (ISA) is available as ``engine.program`` and is
+what `initStencilcode` would broadcast to the SPUs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .halo import distributed_stencil_fn
+from .isa import Program, assemble
+from .segment import SegmentConfig
+from .stencil import StencilSpec
+
+Backend = Literal["ref", "pallas"]
+
+
+class CasperEngine:
+    def __init__(
+        self,
+        spec: StencilSpec,
+        backend: Backend = "ref",
+        segment: SegmentConfig | None = None,
+        interpret: bool = True,
+    ):
+        self.spec = spec
+        self.backend = backend
+        self.segment = segment or SegmentConfig()
+        self.interpret = interpret
+        self.program: Program = assemble(spec)
+        self._step = self._build_step()
+
+    def _build_step(self) -> Callable[[jax.Array], jax.Array]:
+        if self.backend == "ref":
+            return functools.partial(_ref.apply_stencil, self.spec)
+        if self.backend == "pallas":
+            from repro.kernels import ops as kops  # lazy: optional dep
+            return functools.partial(kops.stencil_apply, self.spec,
+                                     interpret=self.interpret)
+        raise ValueError(f"unknown backend {self.backend!r}")
+
+    def step(self, grid: jax.Array) -> jax.Array:
+        return self._step(grid)
+
+    @functools.cached_property
+    def _run_jit(self):
+        @functools.partial(jax.jit, static_argnames=("iters",))
+        def run(grid, iters: int):
+            def body(g, _):
+                return self._step(g), None
+            out, _ = jax.lax.scan(body, grid, None, length=iters)
+            return out
+        return run
+
+    def run(self, grid: jax.Array, iters: int = 1) -> jax.Array:
+        return self._run_jit(grid, iters=iters)
+
+    def distributed_fn(self, mesh, grid_axes: Sequence[str | None],
+                       iters: int = 1):
+        """Jitted multi-device step on ``mesh`` (see core.halo)."""
+        return distributed_stencil_fn(self.spec, mesh, grid_axes, iters)
+
+    # Casper API surface (Table 1), as thin documentation shims -------------
+    def init_stencil_segment(self, size_bytes: int) -> SegmentConfig:
+        return SegmentConfig(mapping="blocked")
+
+    def init_stencilcode(self) -> tuple[int, ...]:
+        return self.program.words

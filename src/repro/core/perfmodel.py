@@ -1,0 +1,294 @@
+"""First-order analytical performance & energy model (paper §7, Table 2).
+
+The paper evaluates Casper in gem5.  We cannot run gem5 here, so this module
+re-derives the paper's Figures 10-13 and Tables 5-6 from an explicit
+first-order bottleneck model parameterized by the paper's own Table 2
+constants.  Every constant is either taken verbatim from the paper or marked
+CALIBRATED with its provenance; `benchmarks/` report model-vs-paper deltas
+cell by cell, so the faithfulness of the reproduction is measurable.
+
+Units: seconds, bytes, Joules.  One "sweep" = one stencil application over
+the full grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .isa import Program, assemble
+from .segment import SegmentConfig, remote_fraction
+from .stencil import PAPER_STENCILS, DOMAIN_SIZES, StencilSpec
+
+# ----------------------------------------------------------------------------
+# Machine constants (Table 2 unless noted)
+# ----------------------------------------------------------------------------
+FREQ = 2.0e9                     # 2 GHz
+N_CORES = 16
+N_SPUS = 16
+N_SLICES = 16
+VEC_ELEMS = 8                    # 512-bit SIMD / f64
+ELEM = 8                         # bytes per element (double)
+LINE = 64                        # bytes per cache line
+
+# Peak f64 FLOP/s of the baseline CPU; the paper's Fig. 1 horizontal line.
+CPU_PEAK_FLOPS = 537.6e9
+# Fig. 1: all stencils achieve <20% of peak; stencil compute retires at a
+# fraction of peak even when not memory-bound. CALIBRATED to Fig. 1 / [42].
+CPU_COMPUTE_EFFICIENCY = 0.25
+
+# Cache capacities.
+L1_BYTES = 32 * 1024
+L2_BYTES = 256 * 1024            # per core
+LLC_BYTES = 32 * 1024 * 1024     # shared, 16 slices x 2 MB
+
+# Aggregate sustainable bandwidths (derived from Table 2 port widths).
+L2_BW = N_CORES * 64 * FREQ      # 2048 GB/s: 1 load port x 64 B x 16 cores
+LLC_CPU_BW = N_SLICES * 64 * FREQ / 2.0   # CPU-side LLC bw; /2 CALIBRATED
+                                          # (NoC round-trip + MSHR limits)
+LLC_LOCAL_BW = N_SLICES * 64 * FREQ       # SPU-side: local slice, no NoC
+DRAM_BW = 4 * 25.6e9             # 4 x DDR4-3200 channels
+
+# Energies (Table 2).
+E_CPU_INSTR = 0.08e-9
+E_SPU_INSTR = 0.016e-9
+E_L1_HIT, E_L1_MISS = 15e-12, 33e-12
+E_L2_HIT, E_L2_MISS = 46e-12, 93e-12
+E_L3_HIT, E_L3_MISS = 945e-12, 1904e-12
+E_DRAM = 160e-9                  # per 64 B read/write
+
+# Remote-slice service penalty for SPU loads, in cycles of extra occupancy
+# per remote vector load (NoC hop + remote slice port contention, partially
+# hidden by the 10-entry load queue). CALIBRATED to Table 5 3-D rows.
+REMOTE_PENALTY_CYCLES = 10.0
+
+# GPU (Titan V, §7.1/§8.3): 652.8 GB/s HBM2, 7.45 f64 TFLOP/s, 815 mm^2.
+GPU_BW = 652.8e9
+GPU_PEAK_FLOPS = 7.45e12
+GPU_AREA_MM2 = 815.0
+GPU_LAUNCH_S = 3.3e-6            # kernel launch + sync floor; CALIBRATED to
+                                 # Table 5 GPU L2 rows (~4k cycles @ 1.2 GHz)
+GPU_FREQ = 1.2e9                 # for converting Table 5 GPU cycles
+
+# Casper hardware additions (§8.6): 16 SPUs + unaligned-load logic.
+CASPER_AREA_MM2 = 16 * 0.146 + 16 * 0.14   # = 4.58 (paper rounds to 4.65)
+
+# PIMS (§8.4): performance bounded by HMC atomic-op throughput [156,157].
+# CALIBRATED so cache-resident speedup averages ~5.5x (Fig. 13).
+PIMS_ATOMICS_PER_S = 35e9
+PIMS_INTERNAL_BW = 320e9         # HMC internal bandwidth for streaming
+
+# Baseline-CPU pathologies reported in §8.1 that a first-order model cannot
+# derive: the Blur2D DRAM dataset suffers prefetcher-induced evictions (LLC
+# hit rate 2%, 4x more DRAM accesses). Taken from the paper's own analysis.
+CPU_DRAM_TRAFFIC_FACTOR = {"blur2d": 4.0}
+
+
+def _dataset_level(spec: StencilSpec, shape: tuple[int, ...]) -> str:
+    n_bytes = 2 * math.prod(shape) * ELEM          # in + out arrays
+    if n_bytes <= N_CORES * L2_BYTES:
+        return "L2"
+    if n_bytes <= LLC_BYTES:
+        return "L3"
+    return "DRAM"
+
+
+# ----------------------------------------------------------------------------
+# Result record
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SweepCost:
+    seconds: float
+    energy_j: float
+    bottleneck: str
+    detail: dict
+
+    @property
+    def cycles(self) -> float:
+        return self.seconds * FREQ
+
+
+# ----------------------------------------------------------------------------
+# Baseline CPU model
+# ----------------------------------------------------------------------------
+def cpu_sweep(spec: StencilSpec, shape: tuple[int, ...]) -> SweepCost:
+    n = math.prod(shape)
+    level = _dataset_level(spec, shape)
+    flops = 2.0 * spec.n_taps * n
+    t_compute = flops / (CPU_PEAK_FLOPS * CPU_COMPUTE_EFFICIENCY)
+
+    # Streaming traffic: read input once, write + write-allocate output.
+    traffic = 3.0 * n * ELEM
+    times = {"compute": t_compute}
+    if level == "L2":
+        times["L2"] = traffic / L2_BW
+    elif level == "L3":
+        times["L2"] = traffic / L2_BW
+        times["LLC"] = traffic / LLC_CPU_BW
+    else:
+        dram_traffic = traffic * CPU_DRAM_TRAFFIC_FACTOR.get(spec.name, 1.0)
+        times["L2"] = traffic / L2_BW
+        times["LLC"] = traffic / LLC_CPU_BW
+        times["DRAM"] = dram_traffic / DRAM_BW
+    bottleneck = max(times, key=times.get)
+    seconds = times[bottleneck]
+
+    # Energy: per-element L1 work + line-granular traffic down the hierarchy.
+    loads_stores = (spec.n_taps + 1) * n
+    instrs = 1.4 * loads_stores          # ld/st + MAC + loop overhead mix;
+                                         # CALIBRATED to Table 4 CPU rows
+    lines = traffic / LINE
+    energy = instrs * E_CPU_INSTR + loads_stores * E_L1_HIT
+    if level in ("L3", "DRAM"):
+        energy += lines * (E_L2_MISS + E_L3_HIT)
+    else:
+        energy += lines * E_L2_HIT
+    if level == "DRAM":
+        dram_lines = lines * CPU_DRAM_TRAFFIC_FACTOR.get(spec.name, 1.0)
+        energy += dram_lines * (E_L3_MISS - E_L3_HIT) + dram_lines * E_DRAM
+    return SweepCost(seconds, energy, bottleneck,
+                     {"level": level, "times": times, "instrs": instrs})
+
+
+# ----------------------------------------------------------------------------
+# Casper model
+# ----------------------------------------------------------------------------
+def casper_sweep(
+    spec: StencilSpec,
+    shape: tuple[int, ...],
+    program: Program | None = None,
+    seg: SegmentConfig | None = None,
+    unaligned_hw: bool = True,
+) -> SweepCost:
+    n = math.prod(shape)
+    level = _dataset_level(spec, shape)
+    program = program or assemble(spec)
+    seg = seg or SegmentConfig()
+    n_instr = program.n_instrs
+
+    vectors = n / VEC_ELEMS
+    loads = program.loads_per_vector()
+    vec_loads = loads["with_casper"] if unaligned_hw else loads["without_casper"]
+
+    # Issue/bandwidth term: the SPU pipeline retires one vector op per cycle
+    # and its local slice supplies one 64 B window per cycle -> the two rates
+    # are matched by construction (§3.1), so cycles/vector = max(instr, loads).
+    cyc_per_vec = max(n_instr, vec_loads)
+
+    # Remote-slice accesses (only at block boundaries under the linear hash).
+    rf = remote_fraction(spec, shape, seg)
+    cyc_per_vec += rf * vec_loads * REMOTE_PENALTY_CYCLES
+
+    t_spu = vectors * cyc_per_vec / (N_SPUS * FREQ)
+    times = {"spu": t_spu}
+    traffic = 3.0 * n * ELEM
+    if level == "DRAM":
+        times["DRAM"] = traffic / DRAM_BW
+    bottleneck = max(times, key=times.get)
+    seconds = times[bottleneck]
+
+    # Energy: SPU instructions + per-element LLC accesses (+ DRAM fills).
+    llc_accesses = (n_instr + 1) * n     # every tap load + the output store
+    energy = (vectors * n_instr * N_SPUS / N_SPUS) * E_SPU_INSTR \
+        + llc_accesses * E_L3_HIT
+    if level == "DRAM":
+        energy += (traffic / LINE) * (E_L3_MISS - E_L3_HIT + E_DRAM)
+    return SweepCost(seconds, energy, bottleneck,
+                     {"level": level, "times": times,
+                      "remote_fraction": rf, "cyc_per_vec": cyc_per_vec})
+
+
+# ----------------------------------------------------------------------------
+# GPU / PIMS models
+# ----------------------------------------------------------------------------
+def gpu_sweep(spec: StencilSpec, shape: tuple[int, ...]) -> SweepCost:
+    n = math.prod(shape)
+    traffic = 3.0 * n * ELEM
+    t = max(GPU_LAUNCH_S, traffic / GPU_BW,
+            2.0 * spec.n_taps * n / GPU_PEAK_FLOPS)
+    bottleneck = "launch" if t == GPU_LAUNCH_S else "HBM"
+    return SweepCost(t, float("nan"), bottleneck, {})
+
+
+def pims_sweep(spec: StencilSpec, shape: tuple[int, ...]) -> SweepCost:
+    n = math.prod(shape)
+    atomics = spec.n_taps * n            # one atomic MAC-equivalent per tap
+    t_atomic = atomics / PIMS_ATOMICS_PER_S
+    t_bw = 3.0 * n * ELEM / PIMS_INTERNAL_BW
+    t = max(t_atomic, t_bw)
+    return SweepCost(t, float("nan"),
+                     "atomics" if t == t_atomic else "internal_bw", {})
+
+
+# ----------------------------------------------------------------------------
+# Figure-level summaries
+# ----------------------------------------------------------------------------
+def speedup_table() -> dict[str, dict[str, float]]:
+    """Fig. 10: Casper speedup over the CPU baseline, per stencil x level."""
+    out: dict[str, dict[str, float]] = {}
+    for name, spec in PAPER_STENCILS.items():
+        out[name] = {}
+        for level in ("L2", "L3", "DRAM"):
+            shape = DOMAIN_SIZES[level][spec.ndim]
+            out[name][level] = (cpu_sweep(spec, shape).seconds
+                                / casper_sweep(spec, shape).seconds)
+    return out
+
+
+def energy_table() -> dict[str, dict[str, float]]:
+    """Fig. 11: Casper energy normalized to the CPU baseline."""
+    out: dict[str, dict[str, float]] = {}
+    for name, spec in PAPER_STENCILS.items():
+        out[name] = {}
+        for level in ("L2", "L3", "DRAM"):
+            shape = DOMAIN_SIZES[level][spec.ndim]
+            out[name][level] = (casper_sweep(spec, shape).energy_j
+                                / cpu_sweep(spec, shape).energy_j)
+    return out
+
+
+# Paper's reported results for validation (Table 5 cycles -> speedups).
+PAPER_TABLE5_CYCLES = {
+    # stencil: {level: (cpu, gpu, casper)}
+    "jacobi1d": {"L2": (13358, 4030, 4569), "L3": (95251, 36134, 33220),
+                 "DRAM": (3838447, 135360, 4370993)},
+    "7pt1d": {"L2": (14702, 4108, 8449), "L3": (125138, 36594, 66393),
+              "DRAM": (5715526, 139320, 4514872)},
+    "jacobi2d": {"L2": (26457, 4646, 7658), "L3": (178032, 37248, 58734),
+                 "DRAM": (8720011, 140160, 3931701)},
+    "blur2d": {"L2": (95428, 6950, 55764), "L3": (742734, 41318, 446300),
+               "DRAM": (22729495, 153480, 5454431)},
+    "heat3d": {"L2": (39029, 5184, 29572), "L3": (296436, 36633, 286675),
+               "DRAM": (7986968, 140856, 6784185)},
+    "star33_3d": {"L2": (115884, 6758, 100243), "L3": (1009021, 52491,
+                                                       1385955),
+                  "DRAM": (9060219, 278784, 13420984)},
+}
+
+PAPER_TABLE6_ENERGY = {
+    "jacobi1d": {"L2": (0.00012, 0.000468), "L3": (0.00113, 0.00341),
+                 "DRAM": (0.2631221, 0.3114322)},
+    "7pt1d": {"L2": (0.000144, 0.000629), "L3": (0.00145, 0.00469),
+              "DRAM": (0.28253, 0.59888)},
+    "jacobi2d": {"L2": (0.000256, 0.00073), "L3": (0.002, 0.0055),
+                 "DRAM": (0.3483945, 0.8809648)},
+    "blur2d": {"L2": (0.0009, 0.0015), "L3": (0.0075, 0.0118),
+               "DRAM": (0.64639877, 1.19655244)},
+    "heat3d": {"L2": (0.000386, 0.001737), "L3": (0.003364, 0.014002),
+               "DRAM": (0.469465, 1.4752518)},
+    "star33_3d": {"L2": (0.0011542, 0.0028739), "L3": (0.010266, 0.027749),
+                  "DRAM": (0.4424779, 1.8090142)},
+}
+
+# NOTE: Table 5/6 cycle & energy counts are for the benchmark's full run
+# (multiple sweeps + setup); we validate on *ratios* (speedup, normalized
+# energy), which cancel the sweep count.
+
+
+def paper_speedup(stencil: str, level: str) -> float:
+    cpu, _, casper = PAPER_TABLE5_CYCLES[stencil][level]
+    return cpu / casper
+
+
+def paper_energy_ratio(stencil: str, level: str) -> float:
+    cpu, casper = PAPER_TABLE6_ENERGY[stencil][level]
+    return casper / cpu

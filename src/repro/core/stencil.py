@@ -1,0 +1,164 @@
+"""Stencil specifications (the paper's §2.1 objects).
+
+A stencil is a fixed pattern of (offset, coefficient) taps applied to every
+point of a regular grid.  All six kernels evaluated by the paper (§7.2) are
+Jacobi-style: disjoint read/write sets, one FP multiply-accumulate per tap.
+
+Boundary convention: zero padding (the paper computes interior points of a
+segment; zero-pad is the equivalent closed form and is used consistently by
+the reference oracle, the ISA VM, the Pallas kernels and the distributed
+halo-exchange step, so all implementations agree bit-for-bit in f64/f32).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+Offset = tuple[int, ...]
+Tap = tuple[Offset, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A fixed stencil pattern: ``out[p] = sum_k coeff_k * in[p + off_k]``."""
+
+    name: str
+    ndim: int
+    taps: tuple[Tap, ...]
+
+    def __post_init__(self):
+        if self.ndim < 1 or self.ndim > 3:
+            raise ValueError(f"ndim must be 1..3, got {self.ndim}")
+        seen = set()
+        for off, _ in self.taps:
+            if len(off) != self.ndim:
+                raise ValueError(f"offset {off} rank != ndim {self.ndim}")
+            if off in seen:
+                raise ValueError(f"duplicate tap offset {off}")
+            seen.add(off)
+
+    @property
+    def n_taps(self) -> int:
+        return len(self.taps)
+
+    @property
+    def halo(self) -> tuple[int, ...]:
+        """Per-dimension halo radius (max |offset| along that dim)."""
+        return tuple(
+            max((abs(off[d]) for off, _ in self.taps), default=0)
+            for d in range(self.ndim)
+        )
+
+    @property
+    def coeffs(self) -> tuple[float, ...]:
+        return tuple(c for _, c in self.taps)
+
+    @property
+    def offsets(self) -> tuple[Offset, ...]:
+        return tuple(o for o, _ in self.taps)
+
+    def flops_per_point(self) -> int:
+        # one multiply-accumulate (2 flops) per tap, as in the paper's SPU.
+        return 2 * self.n_taps
+
+    def bytes_per_point(self, itemsize: int) -> int:
+        """Minimum streaming traffic per output point (compulsory only).
+
+        Each input point is read once per sweep (spatial reuse captures the
+        taps) and each output written once: the paper's arithmetic-intensity
+        accounting of Fig. 1.
+        """
+        return 2 * itemsize
+
+    def arithmetic_intensity(self, itemsize: int = 8) -> float:
+        return self.flops_per_point() / self.bytes_per_point(itemsize)
+
+
+def _star(ndim: int, radius: int, center: float, arm: float) -> tuple[Tap, ...]:
+    taps: list[Tap] = [((0,) * ndim, center)]
+    for d in range(ndim):
+        for r in range(1, radius + 1):
+            for sgn in (-1, 1):
+                off = [0] * ndim
+                off[d] = sgn * r
+                taps.append((tuple(off), arm))
+    return tuple(taps)
+
+
+def jacobi1d() -> StencilSpec:
+    """Polybench jacobi-1d: out[i] = (a[i-1] + a[i] + a[i+1]) / 3."""
+    c = 1.0 / 3.0
+    return StencilSpec("jacobi1d", 1, _star(1, 1, c, c))
+
+
+def seven_point_1d() -> StencilSpec:
+    """7-point 1D kernel (Holewinski et al. [174]); offsets -3..3."""
+    c = 1.0 / 7.0
+    return StencilSpec("7pt1d", 1, _star(1, 3, c, c))
+
+
+def jacobi2d() -> StencilSpec:
+    """Polybench jacobi-2d (the paper's Fig. 2): 0.2 * 5-point star."""
+    return StencilSpec("jacobi2d", 2, _star(2, 1, 0.2, 0.2))
+
+
+def blur2d() -> StencilSpec:
+    """5x5 Gaussian blur, separable binomial [1 4 6 4 1]/16 per axis."""
+    w = [1.0, 4.0, 6.0, 4.0, 1.0]
+    taps = []
+    for dy in range(-2, 3):
+        for dx in range(-2, 3):
+            taps.append(((dy, dx), w[dy + 2] * w[dx + 2] / 256.0))
+    return StencilSpec("blur2d", 2, tuple(taps))
+
+
+def heat3d() -> StencilSpec:
+    """7-point 3D heat diffusion (Polybench heat-3d style)."""
+    return StencilSpec("heat3d", 3, _star(3, 1, 0.4, 0.1))
+
+
+def star33_3d() -> StencilSpec:
+    """33-point 3D high-order stencil (Datta et al. [43,175]).
+
+    The paper does not publish exact coefficients; we use the common
+    high-order composition: dense 3x3x3 core (27 taps) plus the six
+    axis-aligned taps at distance 2, normalized to sum 1.  33 taps total.
+    """
+    taps: list[Tap] = []
+    for dz in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                dist = abs(dz) + abs(dy) + abs(dx)
+                w = {0: 8.0, 1: 4.0, 2: 2.0, 3: 1.0}[dist]
+                taps.append(((dz, dy, dx), w))
+    for d in range(3):
+        for sgn in (-1, 1):
+            off = [0, 0, 0]
+            off[d] = sgn * 2
+            taps.append((tuple(off), 0.5))
+    total = sum(c for _, c in taps)
+    taps = [(o, c / total) for o, c in taps]
+    return StencilSpec("star33_3d", 3, tuple(taps))
+
+
+PAPER_STENCILS: Mapping[str, StencilSpec] = {
+    s.name: s
+    for s in (jacobi1d(), seven_point_1d(), jacobi2d(), blur2d(), heat3d(),
+              star33_3d())
+}
+
+# Table 3 domain sizes: dataset level -> {ndim: shape}.
+DOMAIN_SIZES: Mapping[str, Mapping[int, tuple[int, ...]]] = {
+    "L2": {1: (131072,), 2: (512, 256), 3: (64, 64, 32)},
+    "L3": {1: (1048576,), 2: (1024, 1024), 3: (128, 128, 64)},
+    "DRAM": {1: (4194304,), 2: (2048, 2048), 3: (256, 256, 64)},
+}
+
+
+def domain_for(spec: StencilSpec, level: str) -> tuple[int, ...]:
+    return DOMAIN_SIZES[level][spec.ndim]
+
+
+def grid_points(shape: Sequence[int]) -> int:
+    return math.prod(shape)

@@ -1,0 +1,98 @@
+"""Software SPU: executes an assembled Casper program (semantic model).
+
+Every grid point runs the identical instruction sequence (paper §3.2), so the
+VM executes instruction-by-instruction *vectorized over all grid points at
+once* — semantically identical to the per-point sequential SPU, and it lets
+us validate the ISA against the jnp oracle on full-size grids.
+
+The VM also keeps the event counters (loads by alignment, stores, MACs,
+instructions) that feed the performance/energy model (`perfmodel.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .isa import Program, assemble
+from .stencil import StencilSpec
+
+
+@dataclasses.dataclass
+class SpuCounters:
+    instructions: int = 0      # dynamic vector instructions (all SPUs)
+    loads_aligned: int = 0     # vector loads with shamt == 0
+    loads_unaligned: int = 0   # vector loads needing the §4.1 mechanism
+    stores: int = 0
+    macs: int = 0              # scalar MAC operations
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def _shifted(grid: np.ndarray, offset: tuple[int, ...]) -> np.ndarray:
+    """Zero-padded shifted view: value of in[p + offset] for all p."""
+    out = np.zeros_like(grid)
+    src = []
+    dst = []
+    for o, n in zip(offset, grid.shape):
+        if o >= 0:
+            src.append(slice(o, n))
+            dst.append(slice(0, n - o))
+        else:
+            src.append(slice(0, n + o))
+            dst.append(slice(-o, n))
+    out[tuple(dst)] = grid[tuple(src)]
+    return out
+
+
+class SpuVM:
+    """Executes a Casper program over a grid; counts events."""
+
+    def __init__(self, program: Program, vector_width: int = 8,
+                 n_spus: int = 16):
+        self.program = program
+        self.vector_width = vector_width
+        self.n_spus = n_spus
+        self.counters = SpuCounters()
+
+    def run(self, grid: np.ndarray) -> np.ndarray:
+        prog = self.program
+        plan = prog.plan
+        stream_base = {s.index: s.base for s in plan.streams}
+        acc = np.zeros_like(grid)
+        out = np.zeros_like(grid)
+        n_vectors = -(-grid.size // self.vector_width)
+
+        for instr in prog.instrs:
+            base = stream_base[instr.stream]
+            offset = base[:-1] + (base[-1] + instr.shift,)
+            value = _shifted(grid, offset)
+            coeff = plan.consts[instr.const]
+            if instr.clear_acc:
+                acc = coeff * value
+            else:
+                acc = acc + coeff * value
+            if instr.enable_out:
+                out = acc.copy()
+                self.counters.stores += n_vectors
+            self.counters.instructions += n_vectors
+            if instr.shamt == 0:
+                self.counters.loads_aligned += n_vectors
+            else:
+                self.counters.loads_unaligned += n_vectors
+            self.counters.macs += grid.size
+        return out
+
+    def run_iterations(self, grid: np.ndarray, iters: int) -> np.ndarray:
+        g = grid
+        for _ in range(iters):
+            g = self.run(g)
+        return g
+
+
+def run_program(spec: StencilSpec, grid: np.ndarray,
+                iters: int = 1) -> tuple[np.ndarray, SpuCounters]:
+    vm = SpuVM(assemble(spec))
+    out = vm.run_iterations(grid, iters)
+    return out, vm.counters

@@ -1,0 +1,3 @@
+from .synthetic import DataConfig, SyntheticLM, batch_for_step
+
+__all__ = ["DataConfig", "SyntheticLM", "batch_for_step"]

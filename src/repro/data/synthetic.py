@@ -1,0 +1,71 @@
+"""Stateless deterministic data pipeline.
+
+Every batch is a pure function of (seed, step): restart/elastic-rescale
+recovers the exact token stream with no iterator state to checkpoint.  The
+synthetic LM distribution is a deterministic-chaos map with enough structure
+(copy + offset patterns) for a ~100M model to show a real learning curve in
+a few hundred steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    pattern_period: int = 17      # structure the model can learn
+    pattern_pool: int = 64        # fixed pool of patterns (memorizable)
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> dict:
+        return batch_for_step(self.cfg, step)
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def batch_for_step(cfg: DataConfig, step: int) -> dict:
+    """(seed, step) -> {"tokens": (B, S) int32}; pure & deterministic.
+
+    Each sequence tiles one pattern from a fixed seed-derived pool, with 10%
+    corruption: the model must identify the pattern from the prefix and
+    predict the rest — memorizable structure, so a ~100M model's loss drops
+    well below the uniform-vocabulary entropy within a few hundred steps.
+    """
+    b, s = cfg.global_batch, cfg.seq_len
+    pool = jax.random.randint(
+        jax.random.PRNGKey(cfg.seed ^ 0x5EED),
+        (cfg.pattern_pool, cfg.pattern_period), 0, cfg.vocab,
+        dtype=jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    ids = jax.random.randint(k1, (b,), 0, cfg.pattern_pool, dtype=jnp.int32)
+    reps = -(-s // cfg.pattern_period)
+    tokens = jnp.tile(pool[ids], (1, reps))[:, :s]
+    noise_mask = jax.random.bernoulli(k2, 0.1, (b, s))
+    noise = jax.random.randint(k3, (b, s), 0, cfg.vocab, dtype=jnp.int32)
+    tokens = jnp.where(noise_mask, noise, tokens)
+    return {"tokens": tokens}
+
+
+def host_shard(batch: dict, host_index: int, n_hosts: int) -> dict:
+    """Per-host slice of the global batch (multi-host data loading)."""
+    def slc(x):
+        per = x.shape[0] // n_hosts
+        return x[host_index * per:(host_index + 1) * per]
+    return jax.tree.map(slc, batch)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU)."""
+from .stencil1d import stencil1d
+from .stencil2d import stencil2d
+from .stencil3d import stencil3d
+from .swa import sliding_window_attention
+from . import ops, ref
+
+__all__ = ["stencil1d", "stencil2d", "stencil3d",
+           "sliding_window_attention", "ops", "ref"]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ref import apply_stencil as stencil_ref  # noqa: F401
+from repro.core.stencil import StencilSpec  # noqa: F401
+
+
+def swa_ref(q: jax.Array, k: jax.Array, v: jax.Array, window: int,
+            softcap: float | None = None) -> jax.Array:
+    """Dense windowed-causal attention oracle. q:(B,Hq,S,D), kv:(B,Hkv,S,D)."""
+    b, hq, s, d = q.shape
+    _, hkv, _, _ = k.shape
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(d)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)

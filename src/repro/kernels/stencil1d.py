@@ -1,0 +1,59 @@
+"""1-D stencil Pallas kernel — the Casper SPU recipe on TPU.
+
+Tiling (TARGET: TPU v5e; validated with interpret=True on CPU):
+
+* the output is partitioned into VMEM tiles of ``tile`` elements (the
+  "stencil segment block" owned by one compute step);
+* the input window ``tile + 2*halo`` is fetched with an *element-offset*
+  BlockSpec (``pl.Element``) — one DMA returns the unaligned window spanning
+  "two cache lines", exactly the paper's §4.1 unaligned-load mechanism;
+* every tap is then an in-VMEM ``dynamic_slice`` of the resident window (the
+  paper's rotate network), followed by a MAC — no extra HBM traffic per tap.
+
+Accumulation is f32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.stencil import StencilSpec
+
+DEFAULT_TILE = 512
+
+
+def _kernel(x_ref, o_ref, *, taps, halo, tile):
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.zeros((tile,), jnp.float32)
+    for off, coeff in taps:
+        window = jax.lax.dynamic_slice(x, (halo + off[0],), (tile,))
+        acc = acc + jnp.float32(coeff) * window
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def stencil1d(spec: StencilSpec, grid: jax.Array, tile: int = DEFAULT_TILE,
+              interpret: bool = True) -> jax.Array:
+    """One zero-boundary sweep of a 1-D stencil."""
+    assert spec.ndim == 1 and grid.ndim == 1
+    (halo,) = spec.halo
+    n = grid.shape[0]
+    n_pad = -n % tile
+    # zero boundary + tile alignment in one pad
+    xp = jnp.pad(grid, (halo, halo + n_pad))
+    n_tiles = (n + n_pad) // tile
+
+    kernel = functools.partial(_kernel, taps=tuple(spec.taps), halo=halo,
+                               tile=tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((pl.Element(tile + 2 * halo),),
+                               lambda i: (i * tile,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad,), grid.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:n]

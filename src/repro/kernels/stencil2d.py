@@ -1,0 +1,56 @@
+"""2-D stencil Pallas kernel (Casper tiling on TPU; see stencil1d.py).
+
+Tile shape defaults to (8, 128): a full VREG sublane x lane footprint, with
+the innermost dim a multiple of 128 for MXU/VPU alignment.  The input window
+(tile + 2*halo per dim) is fetched at element offsets — the 2-D version of
+the paper's unaligned load, covering both the innermost-dim shifts (paper's
+shamt) and the row-offset streams in one DMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.stencil import StencilSpec
+
+DEFAULT_TILE = (32, 256)
+
+
+def _kernel(x_ref, o_ref, *, taps, halo, tile):
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(tile, jnp.float32)
+    for off, coeff in taps:
+        start = (halo[0] + off[0], halo[1] + off[1])
+        window = jax.lax.dynamic_slice(x, start, tile)
+        acc = acc + jnp.float32(coeff) * window
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def stencil2d(spec: StencilSpec, grid: jax.Array,
+              tile: tuple[int, int] = DEFAULT_TILE,
+              interpret: bool = True) -> jax.Array:
+    assert spec.ndim == 2 and grid.ndim == 2
+    halo = spec.halo
+    ny, nx = grid.shape
+    ty, tx = tile
+    pad_y, pad_x = -ny % ty, -nx % tx
+    xp = jnp.pad(grid, ((halo[0], halo[0] + pad_y),
+                        (halo[1], halo[1] + pad_x)))
+    gy, gx = (ny + pad_y) // ty, (nx + pad_x) // tx
+
+    kernel = functools.partial(_kernel, taps=tuple(spec.taps), halo=halo,
+                               tile=tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=(gy, gx),
+        in_specs=[pl.BlockSpec(
+            (pl.Element(ty + 2 * halo[0]), pl.Element(tx + 2 * halo[1])),
+            lambda i, j: (i * ty, j * tx))],
+        out_specs=pl.BlockSpec((ty, tx), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ny + pad_y, nx + pad_x), grid.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:ny, :nx]

@@ -1,0 +1,58 @@
+"""3-D stencil Pallas kernel (Casper tiling on TPU; see stencil1d.py).
+
+The z dimension is kept small per tile (VMEM working set = prod(tile+2h));
+the innermost dim stays 128-aligned.  The paper's observation that 3-D
+stencils suffer the most remote-slice traffic shows up here as the
+halo-surface/volume ratio of the tile — the roofline benchmark quantifies it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.stencil import StencilSpec
+
+DEFAULT_TILE = (4, 16, 128)
+
+
+def _kernel(x_ref, o_ref, *, taps, halo, tile):
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(tile, jnp.float32)
+    for off, coeff in taps:
+        start = tuple(h + o for h, o in zip(halo, off))
+        window = jax.lax.dynamic_slice(x, start, tile)
+        acc = acc + jnp.float32(coeff) * window
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def stencil3d(spec: StencilSpec, grid: jax.Array,
+              tile: tuple[int, int, int] = DEFAULT_TILE,
+              interpret: bool = True) -> jax.Array:
+    assert spec.ndim == 3 and grid.ndim == 3
+    halo = spec.halo
+    nz, ny, nx = grid.shape
+    tz, ty, tx = tile
+    pz, py, px = -nz % tz, -ny % ty, -nx % tx
+    xp = jnp.pad(grid, ((halo[0], halo[0] + pz),
+                        (halo[1], halo[1] + py),
+                        (halo[2], halo[2] + px)))
+    gz, gy, gx = (nz + pz) // tz, (ny + py) // ty, (nx + px) // tx
+
+    kernel = functools.partial(_kernel, taps=tuple(spec.taps), halo=halo,
+                               tile=tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=(gz, gy, gx),
+        in_specs=[pl.BlockSpec(
+            (pl.Element(tz + 2 * halo[0]), pl.Element(ty + 2 * halo[1]),
+             pl.Element(tx + 2 * halo[2])),
+            lambda i, j, k: (i * tz, j * ty, k * tx))],
+        out_specs=pl.BlockSpec((tz, ty, tx), lambda i, j, k: (i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((nz + pz, ny + py, nx + px),
+                                       grid.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:nz, :ny, :nx]

@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+# --- everything below this line may import jax -------------------------------
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config              # noqa: E402
+from repro.core import PAPER_STENCILS, distributed_stencil_fn  # noqa: E402
+from repro.launch.mesh import make_production_mesh, make_stencil_mesh  # noqa: E402
+from repro.models import CELLS, cell_supported, input_specs, make_arch  # noqa: E402
+from repro.models.common import PSpec, abstract_params      # noqa: E402
+from repro.optim import AdamWConfig, opt_state_specs        # noqa: E402
+from repro.roofline import build_roofline                    # noqa: E402
+from repro.roofline import hlo_walk                          # noqa: E402
+from repro.sharding import ShardCtx                          # noqa: E402
+from repro.train import make_train_step                      # noqa: E402
+
+RESULTS_DEFAULT = "benchmarks/results/dryrun.json"
+
+# Per-cell baseline implementation knobs (block sizes scale with context so
+# the blockwise-attention HLO stays compact; these are baseline choices, not
+# hillclimb results — see EXPERIMENTS.md §Perf for the iterated versions).
+CELL_OVERRIDES = {
+    "prefill_32k": dict(block_q=2048, block_k=2048, attn_impl="blockwise"),
+    "decode_32k": dict(block_k=4096, attn_impl="blockwise"),
+    "long_500k": dict(block_k=16384, attn_impl="blockwise"),
+    "train_4k": dict(block_q=1024, block_k=1024, attn_impl="blockwise"),
+}
+
+# archs whose optimizer state only fits with 8-bit moments (DESIGN.md §5)
+QUANTIZE_OPT = {"nemotron-4-340b", "internvl2-76b"}
+
+# §Perf hillclimb variants (EXPERIMENTS.md): cfg transformations applied on
+# top of the baseline cell config.
+def _moe_local(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="local"))
+
+
+def _expert_pad(cfg):
+    # pad the expert dim up to a multiple of the 16-way EP axis
+    e = cfg.moe.n_experts
+    pad = -(-e // 16) * 16
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, pad_experts_to=pad))
+
+
+# microbatch (grad-accumulation) factors that bring every train cell's
+# per-device HBM under 16 GiB (v5e) — derived from the baseline sweep's
+# memory_analysis and re-verified by the deploy sweep.
+DEPLOY_ACCUM = {
+    "nemotron-4-340b": 8, "qwen3-14b": 8, "olmoe-1b-7b": 4, "internvl2-76b": 8,
+    "qwen2-moe-a2.7b": 4, "zamba2-7b": 4,
+    "gemma2-27b": 4, "whisper-tiny": 4, "yi-9b": 2, "xlstm-125m": 8,
+}
+
+
+def _deploy(cfg):
+    # flash-decode only where the baseline head-sharding replicates the
+    # cache (n_kv not divisible by the 16-way TP group); for divisible
+    # archs — and batch=1 long-context, which shards seq over dp — the
+    # baseline layout is already right (measured: zamba2 long_500k
+    # regressed 3.7x in the memory term under forced seq-over-TP).
+    seq_shard_kv = cfg.n_kv % 16 != 0
+    # serve_params_tp_only measured NEGATIVE for MoE (expert weights don't
+    # shard over TP -> full replication) and for >70B params; FSDP-sharded
+    # inference params with per-layer gathers stay the deploy default.
+    cfg = dataclasses.replace(
+        cfg, decode_kv_seq_shard=seq_shard_kv, fuse_qkv=True,
+        accum_steps=DEPLOY_ACCUM.get(cfg.arch, 1))
+    if cfg.moe is not None:
+        cfg = _moe_local(cfg)
+        if cfg.moe.n_experts % 16 != 0:
+            cfg = _expert_pad(cfg)      # measured 4.1x collective win
+    return cfg
+
+
+VARIANTS = {
+    "baseline": lambda cfg: cfg,
+    "flashdecode": lambda cfg: dataclasses.replace(
+        cfg, decode_kv_seq_shard=True),
+    "moelocal": _moe_local,
+    "qkvfused": lambda cfg: dataclasses.replace(cfg, fuse_qkv=True),
+    "noseqshard": lambda cfg: dataclasses.replace(cfg, seq_shard=False),
+    "blockq4k": lambda cfg: dataclasses.replace(cfg, block_q=4096,
+                                                block_k=4096),
+    "accum8": lambda cfg: dataclasses.replace(cfg, accum_steps=8),
+    "expertpad": lambda cfg: _expert_pad(_deploy(cfg)),
+    "deploy": _deploy,
+}
+
+
+def _mem_dict(ma) -> dict:
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")
+    return {f: int(getattr(ma, f, 0) or 0) for f in fields}
+
+
+def _cfg_for(arch_id: str, cell_name: str):
+    cfg = get_config(arch_id)
+    over = dict(CELL_OVERRIDES.get(cell_name, {}))
+    cell = CELLS[cell_name]
+    if cfg.family == "audio" and cell.kind != "train":
+        # decoder positions must cover the cell
+        over["max_seq"] = max(cfg.max_seq, cell.seq_len + 64)
+    if cfg.moe is not None:
+        # dispatch groups track the DP degree
+        over["moe"] = dataclasses.replace(
+            cfg.moe, n_groups=min(32, cell.global_batch))
+    return dataclasses.replace(cfg, **over)
+
+
+def _max_len(cell) -> int:
+    return cell.seq_len + 16     # decode room; divisible by 16
+
+
+def lower_cell(arch_id: str, cell_name: str, multi_pod: bool,
+               variant: str = "baseline") -> dict:
+    """lower + compile one (arch x cell x mesh); returns the result record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if variant != "baseline":
+        mesh_name += f"+{variant}"
+    n_dev = 512 if multi_pod else 256
+    cell = CELLS[cell_name]
+    cfg = VARIANTS[variant](_cfg_for(arch_id, cell_name))
+    ok, why = cell_supported(cfg, cell)
+    if not ok:
+        return {"kind": "lm", "arch": arch_id, "cell": cell_name,
+                "mesh": mesh_name, "status": "skipped", "reason": why}
+
+    arch = make_arch(cfg)
+    overrides = ({"fsdp": None}
+                 if cfg.serve_params_tp_only and cell.kind != "train"
+                 else None)
+    ctx = ShardCtx(mesh, overrides=overrides)
+    specs = arch.param_specs(cfg)
+    params_abs = abstract_params(specs, mesh, overrides)
+    batch_abs = input_specs(cfg, cell, mesh)
+
+    t0 = time.time()
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig(quantize_state=arch_id in QUANTIZE_OPT)
+        opt_abs = abstract_params(opt_state_specs(specs, opt_cfg), mesh)
+        step = make_train_step(arch, opt_cfg, ctx)
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+            params_abs, opt_abs, batch_abs)
+    elif cell.kind == "prefill":
+        def prefill(params, batch):
+            return arch.prefill(params, batch, cfg, ctx,
+                                max_len=_max_len(cell))
+        lowered = jax.jit(prefill).lower(params_abs, batch_abs)
+    else:
+        state_abs = abstract_params(
+            arch.decode_state_specs(cfg, cell.global_batch, _max_len(cell)),
+            mesh)
+        len_abs = jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=NamedSharding(mesh, P()))
+
+        def decode(params, state, length, tokens):
+            return arch.decode(params, state, length, tokens, cfg, ctx)
+        lowered = jax.jit(decode, donate_argnums=(1,)).lower(
+            params_abs, state_abs, len_abs, batch_abs["tokens"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = _mem_dict(compiled.memory_analysis())
+    totals = hlo_walk.walk(compiled.as_text(), n_dev)
+    rl = build_roofline(arch_id, cell, mesh_name, n_dev, totals, mem, cfg)
+    rec = {"kind": "lm", "arch": arch_id, "cell": cell_name,
+           "mesh": mesh_name, "status": "ok",
+           "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+           "xla_raw_flops": float(cost.get("flops", 0.0)),
+           "xla_raw_bytes": float(cost.get("bytes accessed", 0.0)),
+           **rl.summary()}
+    return rec
+
+
+STENCIL_DOMAINS = {1: (1 << 26,), 2: (8192, 8192), 3: (512, 512, 256)}
+
+
+def lower_stencil(name: str, multi_pod: bool) -> dict:
+    spec = PAPER_STENCILS[name]
+    mesh = make_stencil_mesh(spec.ndim, multi_pod=multi_pod)
+    mesh_name = ("stencil512" if multi_pod else "stencil256") \
+        + f"_{'x'.join(map(str, mesh.devices.shape))}"
+    n_dev = 512 if multi_pod else 256
+    axes = list(mesh.axis_names) + [None] * (spec.ndim - len(mesh.axis_names))
+    shape = STENCIL_DOMAINS[spec.ndim]
+
+    t0 = time.time()
+    fn = distributed_stencil_fn(spec, mesh, axes[:spec.ndim], iters=2)
+    x_abs = jax.ShapeDtypeStruct(
+        shape, jnp.float32,
+        sharding=NamedSharding(mesh, P(*axes[:spec.ndim])))
+    lowered = fn.lower(x_abs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = _mem_dict(compiled.memory_analysis())
+    totals = hlo_walk.walk(compiled.as_text(), n_dev)
+    from repro.roofline.analysis import (HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16)
+    flops = totals.flops
+    byts = totals.bytes
+    wire = totals.collective_wire_bytes
+    terms = {"compute": flops / PEAK_FLOPS_BF16, "memory": byts / HBM_BW,
+             "collective": wire / (4 * ICI_LINK_BW)}
+    return {"kind": "stencil", "arch": name, "cell": "x".join(map(str, shape)),
+            "mesh": mesh_name, "status": "ok",
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "flops_per_device": flops, "bytes_per_device": byts,
+            "collective_bytes_per_device": wire,
+            "t_compute_s": terms["compute"], "t_memory_s": terms["memory"],
+            "t_collective_s": terms["collective"],
+            "bottleneck": max(terms, key=terms.get),
+            "memory": mem, "collective_ops": totals.collective_ops()}
+
+
+def _key(r: dict) -> str:
+    return f"{r['kind']}:{r['arch']}:{r['cell']}:{r['mesh']}"
+
+
+def load_results(path: str) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return {_key(r): r for r in json.load(f)}
+    return {}
+
+
+def save_results(path: str, results: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(sorted(results.values(), key=_key), f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all', or 'stencils'")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default=RESULTS_DEFAULT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    results = load_results(args.out)
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    jobs = []
+    if args.arch in ("all", "stencils"):
+        for name in PAPER_STENCILS:
+            for mp in meshes:
+                jobs.append(("stencil", name, None, mp))
+    if args.arch != "stencils":
+        archs = ARCH_IDS if args.arch == "all" else [args.arch]
+        cells = list(CELLS) if args.cell == "all" else [args.cell]
+        for a in archs:
+            for cname in cells:
+                for mp in meshes:
+                    jobs.append(("lm", a, cname, mp))
+
+    for kind, a, cname, mp in jobs:
+        if kind == "stencil":
+            probe = {"kind": "stencil", "arch": a,
+                     "cell": "x".join(map(str,
+                                          STENCIL_DOMAINS[
+                                              PAPER_STENCILS[a].ndim])),
+                     "mesh": ("stencil512" if mp else "stencil256")
+                     + f"_{'x'.join(map(str, make_stencil_mesh(PAPER_STENCILS[a].ndim, multi_pod=mp).devices.shape))}"}
+        else:
+            mname = "pod2x16x16" if mp else "pod16x16"
+            if args.variant != "baseline":
+                mname += f"+{args.variant}"
+            probe = {"kind": "lm", "arch": a, "cell": cname, "mesh": mname}
+        if not args.force and _key(probe) in results \
+                and results[_key(probe)].get("status") in ("ok", "skipped"):
+            continue
+        label = f"{kind}:{a}:{cname}:{'multipod' if mp else 'pod'}"
+        print(f"[dryrun] {label} ...", flush=True)
+        try:
+            rec = (lower_stencil(a, mp) if kind == "stencil"
+                   else lower_cell(a, cname, mp, args.variant))
+        except Exception as e:
+            traceback.print_exc()
+            rec = {**probe, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+        results[_key(rec)] = rec
+        save_results(args.out, results)
+        status = rec.get("status")
+        extra = ""
+        if status == "ok" and rec.get("kind") == "lm":
+            extra = (f" bottleneck={rec['bottleneck']}"
+                     f" compile={rec['compile_s']}s")
+        print(f"[dryrun] {label} -> {status}{extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model zoo: the 10 assigned architectures on a shared substrate."""
+from .config import ModelConfig, SsmCfg
+from .moe import MoeCfg
+from .registry import (ArchDef, CELLS, ShapeCell, cell_supported,
+                       input_specs, make_arch, make_batch)
+
+__all__ = ["ModelConfig", "SsmCfg", "MoeCfg", "ArchDef", "CELLS",
+           "ShapeCell", "cell_supported", "input_specs", "make_arch",
+           "make_batch"]

@@ -1,0 +1,158 @@
+"""Shared model substrate: param specs, norms, rope, losses.
+
+Parameters are plain nested dicts of arrays.  Their shapes/shardings are
+declared once as ``PSpec`` trees; init, abstract (dry-run) instantiation and
+sharding all derive from the same declaration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding import resolve
+
+PyTree = Any
+DEFAULT_PARAM_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]         # logical sharding per dim
+    dtype: Any = DEFAULT_PARAM_DTYPE
+    init: str = "normal"                    # normal|zeros|ones|embed
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"shape {self.shape} vs logical {self.logical}")
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def _init_one(key, spec: PSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init in ("normal", "embed"):
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.init_scale / math.sqrt(max(fan_in, 1))
+        x = jax.random.normal(key, spec.shape, jnp.float32) * std
+        return x.astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(key: jax.Array, specs: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(k, s) for k, s in zip(keys, leaves)])
+
+
+def abstract_params(specs: PyTree, mesh: Mesh | None,
+                    overrides: dict | None = None) -> PyTree:
+    """ShapeDtypeStruct tree with shardings attached (dry-run path)."""
+
+    def one(s: PSpec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype)
+        sh = NamedSharding(mesh, resolve(mesh, s.logical, s.shape,
+                                         overrides))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    return jax.tree.map(one, specs, is_leaf=is_pspec)
+
+
+def param_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve(mesh, s.logical, s.shape)),
+        specs, is_leaf=is_pspec)
+
+
+def param_count(specs: PyTree) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree.leaves(specs, is_leaf=is_pspec))
+
+
+def stack_specs(spec_tree: PyTree, n: int) -> PyTree:
+    """Add a leading layer-stack dim (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda s: PSpec((n,) + s.shape, (None,) + s.logical, s.dtype,
+                        s.init, s.init_scale),
+        spec_tree, is_leaf=is_pspec)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if plus_one:                      # gemma-style (1 + scale)
+        s = 1.0 + s
+    return (y * s).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+         ) -> jax.Array:
+    """Rotary embedding. x: (..., S, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.float32(cap) * jnp.tanh(x / jnp.float32(cap))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Mean next-token CE.  logits (..., V) f32; labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) block: chunked parallel scan + single-step decode.
+
+The Casper connection (DESIGN.md §4): the SSD chunked algorithm is a
+*block-contiguous segmentation* of the sequence — intra-chunk work is local
+(quadratic in the small chunk), and only a compact state crosses chunk
+boundaries, exactly the stencil-segment halo structure.  The depthwise
+causal conv (k=4) is literally a 1-D stencil over the sequence.
+
+Math follows the SSD formulation (Mamba-2, arXiv:2405.21060), n_groups=1:
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ,  y_t = C_t . h_t + D x_t
+All decay math in f32 log space.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardCtx
+from .common import PSpec, rms_norm
+from .config import ModelConfig, SsmCfg
+
+
+def mamba_param_specs(cfg: ModelConfig) -> dict[str, PSpec]:
+    s = cfg.ssm
+    d, di = cfg.d_model, s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    conv_dim = di + 2 * gn
+    return {
+        "wz": PSpec((d, di), ("fsdp", "tp")),
+        "wx": PSpec((d, di), ("fsdp", "tp")),
+        "wB": PSpec((d, gn), ("fsdp", None)),
+        "wC": PSpec((d, gn), ("fsdp", None)),
+        "wdt": PSpec((d, h), ("fsdp", "tp")),
+        "conv_w": PSpec((s.d_conv, conv_dim), (None, "tp")),
+        "conv_b": PSpec((conv_dim,), ("tp",), init="zeros"),
+        "A_log": PSpec((h,), ("tp",), dtype=jnp.float32, init="zeros"),
+        "dt_bias": PSpec((h,), ("tp",), dtype=jnp.float32, init="zeros"),
+        "Dskip": PSpec((h,), ("tp",), dtype=jnp.float32, init="ones"),
+        "norm": PSpec((di,), ("tp",), init="ones"),
+        "out": PSpec((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv (a 1-D stencil).  x: (B, L, C); w: (K, C).
+
+    With ``state`` (B, K-1, C) prepended (decode), also returns new state.
+    """
+    k = w.shape[0]
+    if state is not None:
+        xc = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xc[:, -(k - 1):]
+    else:
+        xc = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = xc[:, -(k - 1):]
+    l = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):      # k=4 taps: in-register shifted MACs, Casper-style
+        y = y + xc[:, i:i + l].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+def _segsum(la: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{j < k <= i} la[k] (log decay j -> i), -inf for j > i."""
+    q = la.shape[-1]
+    cs = jnp.cumsum(la, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]     # CA_i - CA_j
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward.  x: (b, l, h, p); dt: (b, l, h); A: (h,);
+    B, C: (b, l, n).  Returns y: (b, l, h, p) and final state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    pad = -l % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    lc = x.shape[1]
+    nc = lc // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    la = dtc * A[None, None, None, :]                     # (b,c,q,h), <= 0
+    la = jnp.moveaxis(la, -1, 2)                          # (b,c,h,q)
+    Lmat = jnp.exp(_segsum(la))                           # (b,c,h,q,q)
+
+    xw = xc.astype(jnp.float32) * dtc[..., None]          # dt_j x_j
+    # intra-chunk output
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp", Cc, Bc, Lmat, xw)
+
+    # end-of-chunk states: decay from j to chunk end
+    cums = jnp.cumsum(la, axis=-1)                        # (b,c,h,q)
+    decay_to_end = jnp.exp(cums[..., -1:] - cums)         # (b,c,h,q)
+    S = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc, decay_to_end, xw)
+
+    # inter-chunk recurrence over c
+    chunk_decay = jnp.exp(jnp.sum(la, axis=-1))           # (b,c,h)
+
+    def body(s_prev, inp):
+        s_c, dec = inp
+        s_new = dec[..., None, None] * s_prev + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        body, s0,
+        (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                 # (b,c,h,p,n)
+
+    # contribution of earlier chunks: C_i . (decay_from_start_i * S_prev)
+    decay_from_start = jnp.exp(cums)                      # (b,c,h,q)
+    y_off = jnp.einsum("bcin,bchi,bchpn->bcihp", Cc, decay_from_start,
+                       s_prevs)
+
+    y = (y_diag + y_off).reshape(b, lc, h, p)[:, :l]
+    return y, s_final
+
+
+def ssd_step(state, x, dt, A, B, C):
+    """One decode step.  state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B, C: (b, n)."""
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * A[None, :])                        # (b,h)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dtf, B.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    new_state = da[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), new_state)
+    return new_state, y
+
+
+def mamba_block(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardCtx,
+                state: dict | None = None):
+    """x: (B, L, D) -> (y, new_state).  state: {conv: (B,K-1,Cc), ssm: ...}"""
+    s = cfg.ssm
+    b, l, d = x.shape
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    n = s.n_groups * s.d_state
+
+    z = jnp.einsum("bld,de->ble", x, p["wz"])
+    xin = jnp.einsum("bld,de->ble", x, p["wx"])
+    Bp = jnp.einsum("bld,dn->bln", x, p["wB"])
+    Cp = jnp.einsum("bld,dn->bln", x, p["wC"])
+    dt = jnp.einsum("bld,dh->blh", x, p["wdt"])
+
+    conv_in = jnp.concatenate([xin, Bp.astype(xin.dtype),
+                               Cp.astype(xin.dtype)], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        state["conv"] if state is not None else None)
+    xin = conv_out[..., :di]
+    Bp = conv_out[..., di:di + n]
+    Cp = conv_out[..., di + n:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"][None, None, :])
+    xh = xin.reshape(b, l, h, s.head_dim)
+    xh = ctx.constrain(xh, "dp", None, "tp", None)
+
+    if state is None or l > 1:
+        # chunked parallel path; prefill starts from a zero state, which is
+        # exactly what ssd_chunked assumes.
+        y, final_state = ssd_chunked(xh, dtf, A, Bp, Cp, s.chunk)
+        new_state = {"conv": conv_state, "ssm": final_state}
+    else:
+        new_ssm, y1 = ssd_step(state["ssm"], xh[:, 0], dtf[:, 0], A,
+                               Bp[:, 0], Cp[:, 0])
+        y = y1[:, None]
+        new_state = {"conv": conv_state, "ssm": new_ssm}
+
+    y = y + p["Dskip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out"])
+    return ctx.constrain(out, "dp", None, None), new_state
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    n = s.n_groups * s.d_state
+    conv_dim = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    n = s.n_groups * s.d_state
+    conv_dim = di + 2 * n
+    batch_ax = "dp" if batch > 1 else None
+    return {
+        "conv": PSpec((batch, s.d_conv - 1, conv_dim),
+                      (batch_ax, None, "tp"), dtype=jnp.bfloat16,
+                      init="zeros"),
+        "ssm": PSpec((batch, h, s.head_dim, s.d_state),
+                     (batch_ax, "tp", None, None), dtype=jnp.float32,
+                     init="zeros"),
+    }

@@ -1,0 +1,47 @@
+"""Dense feed-forward variants: SwiGLU / GeGLU / squared-ReLU / GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardCtx
+from .common import PSpec
+
+GATED = {"swiglu", "geglu"}
+
+
+def mlp_param_specs(d_model: int, d_ff: int, act: str) -> dict[str, PSpec]:
+    if act in GATED:
+        return {
+            "w_in": PSpec((d_model, 2, d_ff), ("fsdp", None, "tp")),
+            "w_out": PSpec((d_ff, d_model), ("tp", "fsdp")),
+        }
+    return {
+        "w_in": PSpec((d_model, d_ff), ("fsdp", "tp")),
+        "w_out": PSpec((d_ff, d_model), ("tp", "fsdp")),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str, ctx: ShardCtx) -> jax.Array:
+    if act in GATED:
+        h = jnp.einsum("bsd,dgf->bsgf", x, p["w_in"])
+        h = ctx.constrain(h, "dp", None, None, "tp")
+        gate, up = h[:, :, 0], h[:, :, 1]
+        if act == "swiglu":
+            h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        else:
+            h = jax.nn.gelu(gate.astype(jnp.float32),
+                            approximate=True).astype(x.dtype) * up
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+        h = ctx.constrain(h, "dp", None, "tp")
+        if act == "sqrelu":
+            r = jax.nn.relu(h.astype(jnp.float32))
+            h = (r * r).astype(x.dtype)
+        elif act == "gelu":
+            h = jax.nn.gelu(h.astype(jnp.float32),
+                            approximate=True).astype(x.dtype)
+        else:
+            raise ValueError(f"unknown act {act}")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return ctx.constrain(y, "dp", None, None)

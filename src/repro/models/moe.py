@@ -1,0 +1,143 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based dispatch, EP.
+
+GShard-style group-local dispatch: tokens are split into ``n_groups``
+contiguous groups (aligned with the data-parallel sharding, so dispatch
+bookkeeping never crosses devices — the Casper block-contiguity rule again);
+each group scatters its tokens into per-expert capacity buffers, experts run
+as one batched einsum with the expert dim sharded over the ``ep`` (= model)
+mesh axis, and results gather back.
+
+Aux losses: load-balance (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardCtx
+from .common import PSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeCfg:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0            # shared (always-on) experts, qwen2-moe style
+    capacity_factor: float = 1.25
+    n_groups: int = 32           # dispatch groups; align to DP shards
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+    # dispatch strategy:
+    #  "ep"     — capacity buffers sharded over the expert axis (classic EP);
+    #             the scatter crosses the model axis (GSPMD reduces partial
+    #             buffers: all-reduce of the full (g,E,C,D) buffer).
+    #  "local"  — buffers stay group-local (dp only); the small expert
+    #             weights are all-gathered instead.  Wins whenever
+    #             token-buffer bytes >> expert-weight bytes (top-8 dispatch).
+    dispatch: str = "ep"
+    # pad the expert dim to a multiple of the EP axis so weights shard
+    # (qwen2-moe: 60 experts don't divide 16-way TP -> full replication);
+    # padded experts get -inf router logits and are never selected.
+    pad_experts_to: int = 0
+
+    @property
+    def n_experts_padded(self) -> int:
+        return max(self.n_experts, self.pad_experts_to)
+
+
+def moe_param_specs(d_model: int, m: MoeCfg) -> dict[str, PSpec]:
+    e, f = m.n_experts_padded, m.d_expert
+    p = {
+        "router": PSpec((d_model, e), ("fsdp", None), dtype=jnp.float32),
+        "w_gate": PSpec((e, d_model, f), ("ep", "fsdp", None)),
+        "w_up": PSpec((e, d_model, f), ("ep", "fsdp", None)),
+        "w_down": PSpec((e, f, d_model), ("ep", None, "fsdp")),
+    }
+    if m.n_shared:
+        fs = m.n_shared * f
+        p["shared_w_in"] = PSpec((d_model, 2, fs), ("fsdp", None, "tp"))
+        p["shared_w_out"] = PSpec((fs, d_model), ("tp", "fsdp"))
+        p["shared_gate"] = PSpec((d_model, 1), ("fsdp", None))
+    return p
+
+
+def moe_ffn(p: dict, x: jax.Array, m: MoeCfg, ctx: ShardCtx
+            ) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (y, aux) with aux = {load_balance, z_loss}."""
+    b, s, d = x.shape
+    n = b * s
+    g = min(m.n_groups, n)
+    while n % g:
+        g -= 1
+    ng = n // g                               # tokens per group
+    xt = x.reshape(g, ng, d)
+    xt = ctx.constrain(xt, "dp", None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xt.astype(jnp.float32), p["router"])
+    if m.n_experts_padded > m.n_experts:
+        pad_mask = jnp.arange(m.n_experts_padded) >= m.n_experts
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)      # (g, ng, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # aux losses
+    e = m.n_experts_padded
+    me = jnp.mean(probs, axis=(0, 1))                         # mean prob
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e), axis=2), axis=(0, 1)) / m.top_k
+    load_balance = e * jnp.sum(me * ce)
+    z = jax.scipy.special.logsumexp(logits, axis=-1)
+    z_loss = jnp.mean(z ** 2)
+    aux = {"load_balance": load_balance, "z_loss": z_loss,
+           "aux_total": (m.aux_loss_weight * load_balance
+                         + m.z_loss_weight * z_loss)}
+
+    # group-local capacity dispatch
+    cap = int(m.capacity_factor * ng * m.top_k / e)
+    cap = max(cap, m.top_k)
+    flat_e = top_e.reshape(g, ng * m.top_k)                   # (g, A)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (g, A, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    slot = jnp.sum(pos * onehot, axis=-1)                     # (g, A)
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap)                         # overflow bin
+
+    # scatter tokens (duplicated per assignment) into (g, E, cap+1, D)
+    xa = jnp.repeat(xt, m.top_k, axis=1)                      # (g, A, D)
+    buf = jnp.zeros((g, e, cap + 1, d), xt.dtype)
+    gi = jnp.arange(g)[:, None]
+    buf = buf.at[gi, flat_e, slot].add(xa)
+    buf = buf[:, :, :cap]                                     # drop overflow
+    ep_ax = "ep" if m.dispatch == "ep" else None
+    buf = ctx.constrain(buf, "dp", ep_ax, None, None)
+
+    # expert computation (SwiGLU); with dispatch="local" the expert weights
+    # are gathered to each dp group, with "ep" the buffers move instead
+    hg = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    hu = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = jax.nn.silu(hg.astype(jnp.float32)).astype(x.dtype) * hu
+    yb = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    yb = ctx.constrain(yb, "dp", ep_ax, None, None)
+
+    # gather back, weight, combine over k
+    yb = jnp.pad(yb, ((0, 0), (0, 0), (0, 1), (0, 0)))        # overflow -> 0
+    ya = yb[gi, flat_e, jnp.where(keep, slot, cap)]           # (g, A, D)
+    ya = ya * (top_w.reshape(g, ng * m.top_k, 1).astype(ya.dtype)
+               * keep[..., None])
+    y = jnp.sum(ya.reshape(g, ng, m.top_k, d), axis=2)
+
+    if m.n_shared:
+        hshared = jnp.einsum("gnd,dzf->gnzf", xt, p["shared_w_in"])
+        gate, up = hshared[:, :, 0], hshared[:, :, 1]
+        hs = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        ys = jnp.einsum("gnf,fd->gnd", hs, p["shared_w_out"])
+        sg = jax.nn.sigmoid(
+            jnp.einsum("gnd,dz->gnz", xt.astype(jnp.float32),
+                       p["shared_gate"]))
+        y = y + ys * sg.astype(y.dtype)
+
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,196 @@
+"""Architecture registry: uniform API over all assigned architectures.
+
+Every arch exposes:
+  param_specs(cfg)                         -> PSpec tree
+  loss(params, batch, cfg, ctx)            -> (scalar, metrics)
+  prefill(params, batch, cfg, ctx, max_len)-> (state, len, logits)
+  decode(params, state, len, tok, cfg, ctx)-> (state, len, logits)
+  decode_state_specs(cfg, batch, max_len)  -> PSpec tree (dry-run decode)
+  input_specs(cfg, cell, mesh)             -> abstract batch for the cell
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.sharding import resolve
+from .common import PSpec
+from .config import ModelConfig
+from . import transformer as tf
+from . import whisper as wh
+from . import xlstm as xl
+from . import zamba2 as zb
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+CELLS: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention arch: 500k-token replay is quadratic;"
+                       " skipped per DESIGN.md §4")
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    cfg: ModelConfig
+    param_specs: Callable[[ModelConfig], Any]
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    decode_state_specs: Callable   # (cfg, batch, max_len) -> PSpec tree
+    decode_state_init: Callable    # (cfg, batch, max_len) -> arrays
+
+
+def _tf_state_specs(cfg, batch, max_len):
+    return tf.cache_specs(cfg, batch, max_len)
+
+
+def _tf_state_init(cfg, batch, max_len):
+    return tf.init_caches(cfg, batch, max_len)
+
+
+def _whisper_state_specs(cfg, batch, max_len):
+    bax = "dp" if batch > 1 else None
+    if cfg.decode_kv_seq_shard:
+        head_ax, seq_ax = None, "tp"
+    else:
+        head_ax = "tp"
+        seq_ax = "sp" if batch == 1 else None
+    self_shape = (cfg.n_layers, batch, cfg.n_kv, max_len, cfg.d_head)
+    cross_shape = (cfg.n_layers, batch, cfg.n_kv,
+                   cfg.max_source_positions, cfg.d_head)
+    kv = lambda shp: {"k": PSpec(shp, (None, bax, head_ax, seq_ax, None),
+                                 dtype=jnp.bfloat16, init="zeros"),
+                      "v": PSpec(shp, (None, bax, head_ax, seq_ax, None),
+                                 dtype=jnp.bfloat16, init="zeros")}
+    return {"self": kv(self_shape), "cross": kv(cross_shape)}
+
+
+def _whisper_state_init(cfg, batch, max_len):
+    import numpy as _np
+    specs = _whisper_state_specs(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def _xlstm_state_specs(cfg, batch, max_len):
+    return xl.xlstm_state_specs(cfg, batch)
+
+
+def _xlstm_state_init(cfg, batch, max_len):
+    return xl.xlstm_state_init(cfg, batch)
+
+
+def _zamba_state_specs(cfg, batch, max_len):
+    return zb.zamba_state_specs(cfg, batch, max_len)
+
+
+def _zamba_state_init(cfg, batch, max_len):
+    return zb.zamba_state_init(cfg, batch, max_len)
+
+
+_FAMILY_DEFS = {
+    "transformer": dict(
+        param_specs=tf.lm_param_specs, loss=tf.lm_loss,
+        prefill=tf.lm_prefill, decode=tf.lm_decode,
+        decode_state_specs=_tf_state_specs,
+        decode_state_init=_tf_state_init),
+    "zamba": dict(
+        param_specs=zb.zamba_param_specs, loss=zb.zamba_loss,
+        prefill=zb.zamba_prefill, decode=zb.zamba_decode,
+        decode_state_specs=_zamba_state_specs,
+        decode_state_init=_zamba_state_init),
+    "xlstm": dict(
+        param_specs=xl.xlstm_param_specs, loss=xl.xlstm_loss,
+        prefill=xl.xlstm_prefill, decode=xl.xlstm_decode,
+        decode_state_specs=_xlstm_state_specs,
+        decode_state_init=_xlstm_state_init),
+    "whisper": dict(
+        param_specs=wh.whisper_param_specs, loss=wh.whisper_loss,
+        prefill=wh.whisper_prefill, decode=wh.whisper_decode,
+        decode_state_specs=_whisper_state_specs,
+        decode_state_init=_whisper_state_init),
+}
+
+
+def family_impl(cfg: ModelConfig) -> str:
+    if cfg.family == "hybrid":
+        return "zamba"
+    if cfg.family == "ssm":
+        return "xlstm"
+    if cfg.family == "audio":
+        return "whisper"
+    return "transformer"
+
+
+def make_arch(cfg: ModelConfig) -> ArchDef:
+    return ArchDef(cfg=cfg, **_FAMILY_DEFS[family_impl(cfg)])
+
+
+# ---------------------------------------------------------------------------
+# abstract batch construction per shape cell
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype, mesh, logical):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype,
+        sharding=NamedSharding(mesh, resolve(mesh, logical, shape)))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh=None) -> dict:
+    """Abstract (ShapeDtypeStruct) model inputs for one shape cell."""
+    b, s = cell.global_batch, cell.seq_len
+    bax = "dp" if b > 1 else None
+    if cell.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {
+                "frames": _sds((b, s, cfg.d_model), jnp.bfloat16, mesh,
+                               (bax, "sp" if b == 1 else None, None)),
+                "tokens": _sds((b, min(s, cfg.max_seq)), jnp.int32, mesh,
+                               (bax, None)),
+            }
+        batch = {"tokens": _sds((b, s - (cfg.n_patches or 0)), jnp.int32,
+                                mesh, (bax, None))}
+        if cfg.n_patches:
+            batch["patch_embeds"] = _sds(
+                (b, cfg.n_patches, cfg.d_model), jnp.bfloat16, mesh,
+                (bax, None, None))
+        return batch
+    # decode: one token per sequence
+    return {"tokens": _sds((b, 1), jnp.int32, mesh, (bax, None))}
+
+
+def make_batch(cfg: ModelConfig, cell: ShapeCell, key=None) -> dict:
+    """Concrete random batch for the cell (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, cell, mesh=None)
+    out = {}
+    for name, sds in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab,
+                                           dtype=sds.dtype)
+        else:
+            out[name] = jax.random.normal(k, sds.shape, jnp.float32) \
+                .astype(sds.dtype)
+    return out

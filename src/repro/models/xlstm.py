@@ -1,0 +1,357 @@
+"""xLSTM: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar memory,
+sequential scan) blocks (arXiv:2405.04517).
+
+Casper connection: the chunkwise mLSTM is another block-contiguous sequence
+segmentation — quadratic work inside a chunk, only the (C, n, m) state
+crossing chunk boundaries.  The sLSTM is strictly sequential (its recurrence
+goes through h_{t-1}) and is implemented as a lax.scan.
+
+Stabilization follows the paper: running max-state m keeps the exponential
+gates bounded; all gate math in f32 log space.
+
+The 125M config has d_ff=0: blocks carry their own projections, there is no
+separate FFN (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardCtx
+from .common import PSpec, cross_entropy, layer_norm, rms_norm, stack_specs
+from .config import ModelConfig
+from .transformer import embed, unembed
+
+MIN_DENOM = 1.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_pdim(cfg: ModelConfig) -> int:
+    """mLSTM head dim after the block's x2 up-projection (paper's
+    proj_factor=2) — this is what brings the 12-layer config to ~125M."""
+    return 2 * cfg.d_head
+
+
+def mlstm_param_specs(cfg: ModelConfig) -> dict[str, PSpec]:
+    d, h = cfg.d_model, cfg.n_heads
+    p = mlstm_pdim(cfg)
+    return {
+        "ln": PSpec((d,), (None,), init="ones"),
+        "wq": PSpec((d, h, p), ("fsdp", "tp", None)),
+        "wk": PSpec((d, h, p), ("fsdp", "tp", None)),
+        "wv": PSpec((d, h, p), ("fsdp", "tp", None)),
+        "wi": PSpec((d, h), ("fsdp", "tp"), dtype=jnp.float32),
+        "wf": PSpec((d, h), ("fsdp", "tp"), dtype=jnp.float32),
+        "bi": PSpec((h,), ("tp",), dtype=jnp.float32, init="zeros"),
+        "bf": PSpec((h,), ("tp",), dtype=jnp.float32, init="ones"),
+        "wog": PSpec((d, h, p), ("fsdp", "tp", None)),
+        "out": PSpec((h, p, d), ("tp", None, "fsdp")),
+    }
+
+
+def mlstm_sequential(q, k, v, log_i, log_f, state=None):
+    """Oracle / decode path.  q,k,v: (b, l, h, p); log_i/f: (b, l, h).
+
+    state = (C: (b,h,p,p), n: (b,h,p), m: (b,h)). Returns (y, state).
+    """
+    b, l, h, p = q.shape
+    if state is None:
+        state = (jnp.zeros((b, h, p, p), jnp.float32),
+                 jnp.zeros((b, h, p), jnp.float32),
+                 jnp.full((b, h), -jnp.inf, jnp.float32))
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt = q[:, t], k[:, t], v[:, t]
+        li, lf = log_i[:, t], log_f[:, t]
+        m_new = jnp.maximum(lf + m, li)
+        fprime = jnp.exp(lf + m - m_new)
+        iprime = jnp.exp(li - m_new)
+        C = fprime[..., None, None] * C + iprime[..., None, None] * (
+            kt[..., :, None].astype(jnp.float32)
+            * vt[..., None, :].astype(jnp.float32))
+        n = fprime[..., None] * n + iprime[..., None] * kt.astype(jnp.float32)
+        num = jnp.einsum("bhp,bhpz->bhz", qt.astype(jnp.float32), C)
+        den = jnp.abs(jnp.einsum("bhp,bhp->bh", qt.astype(jnp.float32), n))
+        # stabilized floor: max(|q.n~|, exp(-m)) in the scaled frame
+        # == max(|q.n|, 1) in the true frame (paper eq. 19)
+        yt = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), yt
+
+    (C, n, m), ys = jax.lax.scan(step, state, jnp.arange(l))
+    y = jnp.moveaxis(ys, 0, 1)          # (b, l, h, p)
+    return y, (C, n, m)
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, chunk: int, state=None):
+    """Chunkwise-parallel mLSTM, numerically matching mlstm_sequential.
+
+    Intra-chunk: attention-like with decay matrix D_ij = exp(F_i - F_j + I_j);
+    inter-chunk: (C, n) state with per-chunk stabilizer handoff.
+    """
+    b, l, h, p = q.shape
+    pad = -l % chunk
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(a, z4) for a in (q, k, v))
+        log_i = jnp.pad(log_i, z3, constant_values=-1e30)
+        log_f = jnp.pad(log_f, z3)
+    lc = q.shape[1]
+    nc = lc // chunk
+    qc = q.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    lic = jnp.moveaxis(log_i.reshape(b, nc, chunk, h), 3, 2)  # (b,c,h,q)
+    lfc = jnp.moveaxis(log_f.reshape(b, nc, chunk, h), 3, 2)
+
+    F = jnp.cumsum(lfc, axis=-1)                      # F_i = sum_{k<=i} lf_k
+    Ftot = F[..., -1]                                 # (b,c,h)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, p, p), jnp.float32)
+        n0 = jnp.zeros((b, h, p), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # log decay j -> i within chunk (+ input gate of j)
+    logD = F[..., :, None] - F[..., None, :] + lic[..., None, :]
+    logD = jnp.where(tri, logD, -jnp.inf)             # (b,c,h,i,j)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qb, kb, vb, li, lf, Fb, Ftot_b, logD_b = xs
+        # stabilizer per position: max over inter (Fb + m) and intra terms
+        m_intra = jnp.max(logD_b, axis=-1)            # (b,h,i)
+        m_pos = jnp.maximum(Fb + m[..., None], m_intra)
+        # intra-chunk scores
+        w = jnp.exp(logD_b - m_pos[..., None])        # (b,h,i,j)
+        qh = jnp.moveaxis(qb, 2, 1)                   # (b,h,i,p)
+        kh = jnp.moveaxis(kb, 2, 1)
+        vh = jnp.moveaxis(vb, 2, 1)
+        s = jnp.einsum("bhip,bhjp->bhij", qh, kh) * w
+        num = jnp.einsum("bhij,bhjz->bhiz", s, vh)
+        # inter-chunk contribution
+        inter_scale = jnp.exp(Fb + m[..., None] - m_pos)   # (b,h,i)
+        num = num + inter_scale[..., None] * jnp.einsum(
+            "bhip,bhpz->bhiz", qh, C)
+        # denominator: q_i . n_i = sum_j w_ij (q_i.k_j) + inter q.n_prev
+        den_q = jnp.abs(jnp.sum(s, axis=-1)
+                        + inter_scale * jnp.einsum("bhip,bhp->bhi", qh, n))
+        # h = num / max(|q.n|, exp(-m_pos)) in the scaled frame:
+        y = num / jnp.maximum(den_q, jnp.exp(-m_pos))[..., None]
+        # state update to end of chunk
+        m_new = jnp.maximum(Ftot_b + m, jnp.max(lic_terms(Ftot_b, Fb, li),
+                                                axis=-1))
+        decay_j = jnp.exp(Ftot_b[..., None] - Fb + li - m_new[..., None])
+        C_new = (jnp.exp(Ftot_b + m - m_new)[..., None, None] * C
+                 + jnp.einsum("bhj,bhjp,bhjz->bhpz", decay_j, kh, vh))
+        n_new = (jnp.exp(Ftot_b + m - m_new)[..., None] * n
+                 + jnp.einsum("bhj,bhjp->bhp", decay_j, kh))
+        return (C_new, n_new, m_new), y
+
+    def lic_terms(Ftot_b, Fb, li):
+        return Ftot_b[..., None] - Fb + li
+
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(lic, 1, 0),
+          jnp.moveaxis(lfc, 1, 0), jnp.moveaxis(F, 1, 0),
+          jnp.moveaxis(Ftot, 1, 0), jnp.moveaxis(logD, 1, 0))
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1)                        # (b, c, h, i, p)
+    y = jnp.moveaxis(y, 2, 3).reshape(b, lc, h, p)[:, :l]
+    return y, (C, n, m)
+
+
+def mlstm_block(pp: dict, x, cfg: ModelConfig, ctx: ShardCtx, state=None):
+    b, l, d = x.shape
+    h, p = cfg.n_heads, mlstm_pdim(cfg)
+    xn = layer_norm_like(x, pp["ln"], cfg)
+    q = jnp.einsum("bld,dhp->blhp", xn, pp["wq"])
+    k = jnp.einsum("bld,dhp->blhp", xn, pp["wk"]) / jnp.sqrt(
+        jnp.asarray(p, x.dtype))
+    v = jnp.einsum("bld,dhp->blhp", xn, pp["wv"])
+    log_i = (jnp.einsum("bld,dh->blh", xn.astype(jnp.float32), pp["wi"])
+             + pp["bi"])
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bld,dh->blh", xn.astype(jnp.float32), pp["wf"])
+        + pp["bf"])
+    if l == 1 and state is not None:
+        y, new_state = mlstm_sequential(q, k, v, log_i, log_f, state)
+    else:
+        y, new_state = mlstm_chunked(q, k, v, log_i, log_f,
+                                     chunk=cfg.ssm.chunk if cfg.ssm else 64,
+                                     state=state)
+        y = jnp.moveaxis(y.reshape(b, l, h, p), 2, 2)
+    og = jax.nn.sigmoid(
+        jnp.einsum("bld,dhp->blhp", xn.astype(jnp.float32),
+                   pp["wog"].astype(jnp.float32)))
+    yh = y.reshape(b, l, h, p) * og
+    out = jnp.einsum("blhp,hpd->bld", yh.astype(x.dtype), pp["out"])
+    return x + ctx.constrain(out, "dp", None, None), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_param_specs(cfg: ModelConfig) -> dict[str, PSpec]:
+    d, h, p = cfg.d_model, cfg.n_heads, cfg.d_head
+    specs = {"ln": PSpec((d,), (None,), init="ones"),
+             "out": PSpec((h, p, d), ("tp", None, "fsdp"))}
+    for g in ("z", "i", "f", "o"):
+        specs[f"w{g}"] = PSpec((d, h, p), ("fsdp", "tp", None),
+                               dtype=jnp.float32)
+        specs[f"r{g}"] = PSpec((h, p, p), ("tp", None, None),
+                               dtype=jnp.float32, init_scale=0.5)
+        specs[f"b{g}"] = PSpec((h, p), ("tp", None), dtype=jnp.float32,
+                               init="zeros")
+    return specs
+
+
+def slstm_scan(pp: dict, xn, state=None):
+    """xn: (b, l, d) normalized input.  Sequential (recurrence through h)."""
+    b, l, d = xn.shape
+    h, p = pp["wz"].shape[1], pp["wz"].shape[2]
+    pre = {g: jnp.einsum("bld,dhp->blhp", xn.astype(jnp.float32), pp[f"w{g}"])
+           + pp[f"b{g}"] for g in ("z", "i", "f", "o")}
+    if state is None:
+        zeros = jnp.zeros((b, h, p), jnp.float32)
+        state = (zeros, zeros, jnp.full((b, h, p), -jnp.inf), zeros)
+
+    def step(carry, t):
+        c, n, m, hprev = carry
+        rec = {g: jnp.einsum("bhp,hpz->bhz", hprev, pp[f"r{g}"])
+               for g in ("z", "i", "f", "o")}
+        zt = jnp.tanh(pre["z"][:, t] + rec["z"])
+        li = pre["i"][:, t] + rec["i"]
+        lf = jax.nn.log_sigmoid(pre["f"][:, t] + rec["f"])
+        ot = jax.nn.sigmoid(pre["o"][:, t] + rec["o"])
+        m_new = jnp.maximum(lf + m, li)
+        ip = jnp.exp(li - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, MIN_DENOM)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, hl), ys = jax.lax.scan(step, state, jnp.arange(l))
+    y = jnp.moveaxis(ys, 0, 1)          # (b, l, h, p)
+    return y, (c, n, m, hl)
+
+
+def slstm_block(pp: dict, x, cfg: ModelConfig, ctx: ShardCtx, state=None):
+    xn = layer_norm_like(x, pp["ln"], cfg)
+    y, new_state = slstm_scan(pp, xn, state)
+    out = jnp.einsum("blhp,hpd->bld", y.astype(x.dtype), pp["out"])
+    return x + ctx.constrain(out, "dp", None, None), new_state
+
+
+def layer_norm_like(x, scale, cfg: ModelConfig):
+    return rms_norm(x, scale, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def xlstm_param_specs(cfg: ModelConfig) -> dict[str, Any]:
+    layers = {}
+    for li in range(cfg.n_layers):
+        if li in cfg.slstm_layers:
+            layers[f"s_{li}"] = slstm_param_specs(cfg)
+        else:
+            layers[f"m_{li}"] = mlstm_param_specs(cfg)
+    return {
+        "embed": PSpec((cfg.vocab, cfg.d_model), ("tp", "fsdp"),
+                       init="embed"),
+        "ln_final": PSpec((cfg.d_model,), (None,), init="ones"),
+        "layers": layers,
+    }
+
+
+def xlstm_apply(params, h, cfg: ModelConfig, ctx: ShardCtx, states=None):
+    new_states = {} if states is not None else None
+    for li in range(cfg.n_layers):
+        if li in cfg.slstm_layers:
+            key = f"s_{li}"
+            block = slstm_block
+        else:
+            key = f"m_{li}"
+            block = mlstm_block
+        if cfg.remat:
+            block = jax.checkpoint(block, static_argnums=(2, 3))
+        st = states[key] if states is not None else None
+        h, ns = block(params["layers"][key], h, cfg, ctx, st)
+        if states is not None:
+            new_states[key] = ns
+    h = rms_norm(h, params["ln_final"], cfg.norm_eps)
+    return h, new_states
+
+
+def xlstm_loss(params, batch, cfg: ModelConfig, ctx: ShardCtx):
+    h = embed(params, batch["tokens"], cfg, ctx)
+    h, _ = xlstm_apply(params, h, cfg, ctx)
+    logits = unembed(params, h[:, :-1], cfg, ctx)
+    loss = cross_entropy(logits, batch["tokens"][:, 1:])
+    return loss, {"loss": loss}
+
+
+def xlstm_state_init(cfg: ModelConfig, batch: int):
+    b, h = batch, cfg.n_heads
+    ps, pm = cfg.d_head, mlstm_pdim(cfg)
+    states = {}
+    for li in range(cfg.n_layers):
+        if li in cfg.slstm_layers:
+            zeros = jnp.zeros((b, h, ps), jnp.float32)
+            states[f"s_{li}"] = (zeros, zeros,
+                                 jnp.full((b, h, ps), -jnp.inf), zeros)
+        else:
+            states[f"m_{li}"] = (jnp.zeros((b, h, pm, pm), jnp.float32),
+                                 jnp.zeros((b, h, pm), jnp.float32),
+                                 jnp.full((b, h), -jnp.inf, jnp.float32))
+    return states
+
+
+def xlstm_state_specs(cfg: ModelConfig, batch: int):
+    b, h = batch, cfg.n_heads
+    ps, pm = cfg.d_head, mlstm_pdim(cfg)
+    bax = "dp" if batch > 1 else None
+    states = {}
+    for li in range(cfg.n_layers):
+        if li in cfg.slstm_layers:
+            v = PSpec((b, h, ps), (bax, "tp", None), dtype=jnp.float32,
+                      init="zeros")
+            states[f"s_{li}"] = (v, v, v, v)
+        else:
+            states[f"m_{li}"] = (
+                PSpec((b, h, pm, pm), (bax, "tp", None, None),
+                      dtype=jnp.float32, init="zeros"),
+                PSpec((b, h, pm), (bax, "tp", None), dtype=jnp.float32,
+                      init="zeros"),
+                PSpec((b, h), (bax, "tp"), dtype=jnp.float32, init="zeros"),
+            )
+    return states
+
+
+def xlstm_prefill(params, batch, cfg: ModelConfig, ctx: ShardCtx,
+                  max_len=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    states = xlstm_state_init(cfg, b)
+    h = embed(params, tokens, cfg, ctx)
+    h, states = xlstm_apply(params, h, cfg, ctx, states)
+    logits = unembed(params, h[:, -1:], cfg, ctx)
+    return states, jnp.int32(s), logits
+
+
+def xlstm_decode(params, states, cache_len, tokens, cfg: ModelConfig,
+                 ctx: ShardCtx):
+    h = embed(params, tokens, cfg, ctx)
+    h, states = xlstm_apply(params, h, cfg, ctx, states)
+    logits = unembed(params, h, cfg, ctx)
+    return states, cache_len + tokens.shape[1], logits

@@ -1,0 +1,237 @@
+"""Zamba2: Mamba2 backbone + a *shared* transformer block applied
+periodically (every ``attn_every`` SSM layers), with per-invocation LoRA.
+
+Wiring (arXiv:2411.15242, simplified where the paper under-specifies):
+  * 81 Mamba2 blocks, scanned as 27 units x 3 blocks;
+  * the shared block fires on every second unit (=> every 6 layers, 13
+    applications), gated by ``lax.cond`` so the scan body stays uniform;
+  * the shared block consumes concat(hidden, original embedding) (width 2D)
+    and projects back to D; its weights are shared across applications, with
+    small per-unit LoRA adapters on q/k/v (rank ``cfg.lora_rank``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardCtx
+from .attention import AttnCfg, attention, make_cache
+from .common import PSpec, cross_entropy, rms_norm, stack_specs
+from .config import ModelConfig
+from .mamba2 import (mamba_block, mamba_param_specs, mamba_state_init,
+                     mamba_state_specs)
+from .transformer import embed, unembed
+
+
+LAYERS_PER_UNIT = 3
+
+
+def shared_attn_cfg(cfg: ModelConfig) -> AttnCfg:
+    return AttnCfg(
+        d_model=2 * cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+        block_q=cfg.block_q, block_k=cfg.block_k, impl=cfg.attn_impl,
+        decode_seq_shard=cfg.decode_kv_seq_shard)
+
+
+def _unit_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d2 = 2 * cfg.d_model
+    r = cfg.lora_rank
+    hqd = cfg.n_heads * cfg.d_head
+    kvd = cfg.n_kv * cfg.d_head
+    specs: dict[str, Any] = {}
+    for i in range(LAYERS_PER_UNIT):
+        specs[f"mamba_{i}"] = mamba_param_specs(cfg)
+        specs[f"ln_{i}"] = PSpec((cfg.d_model,), (None,), init="ones")
+    if r:
+        for nm, od in (("q", hqd), ("k", kvd), ("v", kvd)):
+            specs[f"lora_{nm}_a"] = PSpec((d2, r), ("fsdp", None))
+            specs[f"lora_{nm}_b"] = PSpec((r, od), (None, "tp"),
+                                          init="zeros")
+    return specs
+
+
+def _shared_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d, d2 = cfg.d_model, 2 * cfg.d_model
+    f = cfg.d_ff
+    return {
+        "ln_attn": PSpec((d2,), (None,), init="ones"),
+        "wq": PSpec((d2, cfg.n_heads, cfg.d_head), ("fsdp", "tp", None)),
+        "wk": PSpec((d2, cfg.n_kv, cfg.d_head), ("fsdp", "tp", None)),
+        "wv": PSpec((d2, cfg.n_kv, cfg.d_head), ("fsdp", "tp", None)),
+        "wo": PSpec((cfg.n_heads, cfg.d_head, d), ("tp", None, "fsdp")),
+        "ln_mlp": PSpec((d2,), (None,), init="ones"),
+        "w_in": PSpec((d2, 2, f), ("fsdp", None, "tp")),
+        "w_out": PSpec((f, d), ("tp", "fsdp")),
+    }
+
+
+def zamba_param_specs(cfg: ModelConfig) -> dict[str, Any]:
+    assert cfg.n_layers % LAYERS_PER_UNIT == 0
+    n_units = cfg.n_layers // LAYERS_PER_UNIT
+    return {
+        "embed": PSpec((cfg.vocab, cfg.d_model), ("tp", "fsdp"),
+                       init="embed"),
+        "ln_final": PSpec((cfg.d_model,), (None,), init="ones"),
+        "units": stack_specs(_unit_specs(cfg), n_units),
+        "shared": _shared_specs(cfg),
+    }
+
+
+def _apply_shared(cfg: ModelConfig, ctx: ShardCtx, shared: dict, up: dict,
+                  h, h0, kv_cache, pos0, cache_len):
+    d2 = 2 * cfg.d_model
+    x2 = jnp.concatenate([h, h0], axis=-1)
+    x2n = rms_norm(x2, shared["ln_attn"], cfg.norm_eps)
+    p = dict(wq=shared["wq"], wk=shared["wk"], wv=shared["wv"],
+             wo=shared["wo"])
+    if cfg.lora_rank:
+        for nm in ("q", "k", "v"):
+            delta = (up[f"lora_{nm}_a"].astype(jnp.float32)
+                     @ up[f"lora_{nm}_b"].astype(jnp.float32))
+            base = p[f"w{nm}"]
+            p[f"w{nm}"] = base + delta.reshape(base.shape).astype(base.dtype)
+    a_out, new_kv = attention(p, x2n, shared_attn_cfg(cfg), ctx, pos0=pos0,
+                              cache=kv_cache, cache_len=cache_len)
+    h = h + a_out
+    x2 = jnp.concatenate([h, h0], axis=-1)
+    m_in = rms_norm(x2, shared["ln_mlp"], cfg.norm_eps)
+    gm = jnp.einsum("bsd,dgf->bsgf", m_in, shared["w_in"])
+    hh = (jax.nn.silu(gm[:, :, 0].astype(jnp.float32)).astype(h.dtype)
+          * gm[:, :, 1])
+    h = h + jnp.einsum("bsf,fd->bsd", hh, shared["w_out"])
+    return h, new_kv
+
+
+def zamba_apply(params, h, cfg: ModelConfig, ctx: ShardCtx, pos0=0,
+                state=None, cache_len=None):
+    """state: {"kv": stacked kv caches, "ssm": stacked mamba states} or None."""
+    n_units = cfg.n_layers // LAYERS_PER_UNIT
+    h0 = h
+    decode = state is not None
+
+    def body(carry, up):
+        # state travels as carry with in-place indexed updates (aliasing;
+        # see transformer.lm_apply) rather than as scan xs/ys slices.
+        if decode:
+            hh, unit_idx, full_state = carry
+            st = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, unit_idx, 0,
+                                                       keepdims=False),
+                full_state)
+        else:
+            hh, unit_idx = carry
+            st = None
+        new_st = {} if st is not None else None
+        for i in range(LAYERS_PER_UNIT):
+            x_in = rms_norm(hh, up[f"ln_{i}"], cfg.norm_eps)
+            m_st = st[f"ssm_{i}"] if decode else None
+            m_out, m_new = mamba_block(up[f"mamba_{i}"], x_in, cfg, ctx,
+                                       state=m_st)
+            hh = hh + m_out
+            if decode:
+                new_st[f"ssm_{i}"] = m_new
+
+        kv = st["kv"] if (st is not None and "kv" in st) else None
+
+        def fire(args):
+            hh_, kv_ = args
+            return _apply_shared(cfg, ctx, params["shared"], up, hh_, h0,
+                                 kv_, pos0, cache_len)
+
+        def skip(args):
+            hh_, kv_ = args
+            return hh_, kv_
+
+        if kv is not None or not decode:
+            operand = (hh, kv if kv is not None else None)
+            if kv is None:
+                # training: no cache plumbing, still conditional compute
+                hh = jax.lax.cond(unit_idx % 2 == 1,
+                                  lambda a: fire((a, None))[0],
+                                  lambda a: a, hh)
+            else:
+                hh, new_kv = jax.lax.cond(unit_idx % 2 == 1, fire, skip,
+                                          operand)
+                new_st["kv"] = new_kv
+        if decode:
+            full_state = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), unit_idx, 0),
+                full_state, new_st)
+            return (hh, unit_idx + 1, full_state), None
+        return (hh, unit_idx + 1), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    carry0 = ((h, jnp.int32(0), state) if decode
+              else (h, jnp.int32(0)))
+    carry, _ = jax.lax.scan(body, carry0, params["units"])
+    if decode:
+        h, _, new_state = carry
+    else:
+        (h, _), new_state = carry, None
+    h = rms_norm(h, params["ln_final"], cfg.norm_eps)
+    return h, new_state
+
+
+def zamba_loss(params, batch, cfg: ModelConfig, ctx: ShardCtx):
+    h = embed(params, batch["tokens"], cfg, ctx)
+    h, _ = zamba_apply(params, h, cfg, ctx)
+    logits = unembed(params, h[:, :-1], cfg, ctx)
+    loss = cross_entropy(logits, batch["tokens"][:, 1:])
+    return loss, {"loss": loss}
+
+
+def zamba_state_init(cfg: ModelConfig, batch: int, max_len: int):
+    n_units = cfg.n_layers // LAYERS_PER_UNIT
+    unit = {}
+    for i in range(LAYERS_PER_UNIT):
+        unit[f"ssm_{i}"] = mamba_state_init(cfg, batch)
+    unit["kv"] = make_cache(shared_attn_cfg(cfg), batch, max_len)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape), unit)
+
+
+def zamba_state_specs(cfg: ModelConfig, batch: int, max_len: int):
+    n_units = cfg.n_layers // LAYERS_PER_UNIT
+    unit: dict[str, Any] = {}
+    for i in range(LAYERS_PER_UNIT):
+        unit[f"ssm_{i}"] = mamba_state_specs(cfg, batch)
+    batch_ax = "dp" if batch > 1 else None
+    if cfg.decode_kv_seq_shard:
+        head_ax, seq_ax = None, "tp"
+    else:
+        head_ax = "tp"
+        seq_ax = "sp" if batch == 1 else None
+    shape = (batch, cfg.n_kv, max_len, cfg.d_head)
+    unit["kv"] = {
+        "k": PSpec(shape, (batch_ax, head_ax, seq_ax, None),
+                   dtype=jnp.bfloat16, init="zeros"),
+        "v": PSpec(shape, (batch_ax, head_ax, seq_ax, None),
+                   dtype=jnp.bfloat16, init="zeros"),
+    }
+    return stack_specs(unit, n_units)
+
+
+def zamba_prefill(params, batch, cfg: ModelConfig, ctx: ShardCtx,
+                  max_len: int | None = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    state = zamba_state_init(cfg, b, max_len or s)
+    h = embed(params, tokens, cfg, ctx)
+    h, state = zamba_apply(params, h, cfg, ctx, pos0=0, state=state,
+                           cache_len=jnp.int32(0))
+    logits = unembed(params, h[:, -1:], cfg, ctx)
+    return state, jnp.int32(s), logits
+
+
+def zamba_decode(params, state, cache_len, tokens, cfg: ModelConfig,
+                 ctx: ShardCtx):
+    h = embed(params, tokens, cfg, ctx)
+    h, state = zamba_apply(params, h, cfg, ctx, pos0=cache_len, state=state,
+                           cache_len=cache_len)
+    logits = unembed(params, h, cfg, ctx)
+    return state, cache_len + tokens.shape[1], logits

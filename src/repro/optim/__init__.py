@@ -1,0 +1,6 @@
+from .adamw import (AdamWConfig, apply_updates, global_norm, init_opt_state,
+                    opt_state_specs, schedule)
+from . import compress
+
+__all__ = ["AdamWConfig", "apply_updates", "global_norm", "init_opt_state",
+           "opt_state_specs", "schedule", "compress"]

@@ -1,0 +1,217 @@
+"""AdamW with fp32 master weights and optional 8-bit quantized moments.
+
+The 8-bit state (block-wise absmax scaling, bitsandbytes-style) is what lets
+nemotron-4-340b's optimizer fit a 256-chip v5e pod: 2 (bf16 param) + 4 (fp32
+master) + 1 + 1 (int8 m, v) + scales ~= 8.3 B/param instead of 18 B/param.
+
+All update math in f32; moments are dequantized, updated, requantized per
+step (error is bounded by the block absmax / 127 quantile tests cover it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import PSpec, is_pspec
+
+QBLOCK = 256         # elements per quantization block
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_state: bool = False
+    # warmup/cosine schedule
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(c: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(c.warmup_steps, 1)
+    prog = (step - c.warmup_steps) / jnp.maximum(
+        c.total_steps - c.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = c.min_lr_frac + (1 - c.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return c.lr * jnp.where(step < c.warmup_steps, warm, cos)
+
+
+# --- 8-bit block quantization ------------------------------------------------
+# Blocks run along the LAST axis so the int8 arrays keep the parameter's
+# shape (padded) and inherit its sharding — no cross-device re-layout at
+# update time.  m (signed, benign errors): linear absmax.  v (positive,
+# spans many orders of magnitude): LOG-space linear — absmax-int8 on v
+# rounds small entries to zero and the Adam denominator explodes.
+def _blocked(x: jax.Array) -> jax.Array:
+    last = x.shape[-1] if x.ndim else 1
+    pad = -last % QBLOCK
+    if x.ndim == 0:
+        x = x.reshape(1)
+        pad = QBLOCK - 1
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(x.shape[:-1] + (x.shape[-1] // QBLOCK, QBLOCK))
+
+
+def _unblocked(b: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    flatlast = b.reshape(b.shape[:-2] + (b.shape[-2] * b.shape[-1],))
+    if not shape:
+        return flatlast.reshape(-1)[0]
+    return flatlast[..., :shape[-1]].reshape(shape)
+
+
+def _quantize_signed(x: jax.Array) -> dict:
+    b = _blocked(x.astype(jnp.float32))
+    scale = jnp.maximum(jnp.max(jnp.abs(b), axis=-1, keepdims=True) / 127.0,
+                        1e-12)
+    q = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize_signed(s: dict, shape: tuple[int, ...]) -> jax.Array:
+    return _unblocked(s["q"].astype(jnp.float32) * s["scale"], shape)
+
+
+_LOG_FLOOR = -46.0          # log(1e-20)
+
+
+def _quantize_log(x: jax.Array) -> dict:
+    b = _blocked(x.astype(jnp.float32))
+    lv = jnp.log(jnp.maximum(b, 1e-20))
+    mn = jnp.min(lv, axis=-1, keepdims=True)
+    mx = jnp.max(lv, axis=-1, keepdims=True)
+    span = jnp.maximum(mx - mn, 1e-6)
+    q = jnp.clip(jnp.round((lv - mn) / span * 127.0), 0, 127) \
+        .astype(jnp.int8)
+    return {"q": q, "mn": mn.astype(jnp.float32),
+            "span": span.astype(jnp.float32)}
+
+
+def _dequantize_log(s: dict, shape: tuple[int, ...]) -> jax.Array:
+    lv = s["q"].astype(jnp.float32) / 127.0 * s["span"] + s["mn"]
+    v = jnp.exp(lv)
+    v = jnp.where(lv <= _LOG_FLOOR + 1e-3, 0.0, v)
+    return _unblocked(v, shape)
+
+
+# --- state -------------------------------------------------------------------
+def opt_state_specs(param_specs: Any, c: AdamWConfig) -> dict:
+    """PSpec tree of the optimizer state (same shardings as the params)."""
+
+    def master(s: PSpec):
+        return PSpec(s.shape, s.logical, jnp.float32, "zeros")
+
+    def _qshapes(s: PSpec):
+        shape = s.shape if s.shape else (1,)
+        logical = s.logical if s.shape else (None,)
+        last = shape[-1]
+        nb = -(-last // QBLOCK)
+        qshape = shape[:-1] + (nb, QBLOCK)
+        qlogical = logical[:-1] + (None, None)
+        sshape = shape[:-1] + (nb, 1)
+        return qshape, qlogical, sshape
+
+    def moment_m(s: PSpec):
+        if not c.quantize_state:
+            return PSpec(s.shape, s.logical, jnp.float32, "zeros")
+        qshape, qlogical, sshape = _qshapes(s)
+        return {"q": PSpec(qshape, qlogical, jnp.int8, "zeros"),
+                "scale": PSpec(sshape, qlogical, jnp.float32, "zeros")}
+
+    def moment_v(s: PSpec):
+        if not c.quantize_state:
+            return PSpec(s.shape, s.logical, jnp.float32, "zeros")
+        qshape, qlogical, sshape = _qshapes(s)
+        return {"q": PSpec(qshape, qlogical, jnp.int8, "zeros"),
+                "mn": PSpec(sshape, qlogical, jnp.float32, "zeros"),
+                "span": PSpec(sshape, qlogical, jnp.float32, "zeros")}
+
+    return {
+        "step": PSpec((), (), jnp.int32, "zeros"),
+        "master": jax.tree.map(master, param_specs, is_leaf=is_pspec),
+        "m": jax.tree.map(moment_m, param_specs, is_leaf=is_pspec),
+        "v": jax.tree.map(moment_v, param_specs, is_leaf=is_pspec),
+    }
+
+
+def init_opt_state(params: Any, c: AdamWConfig) -> dict:
+    def moment_m(p):
+        if not c.quantize_state:
+            return jnp.zeros(p.shape, jnp.float32)
+        return _quantize_signed(jnp.zeros(p.shape, jnp.float32))
+
+    def moment_v(p):
+        if not c.quantize_state:
+            return jnp.zeros(p.shape, jnp.float32)
+        return _quantize_log(jnp.zeros(p.shape, jnp.float32))
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "m": jax.tree.map(moment_m, params),
+        "v": jax.tree.map(moment_v, params),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params: Any, grads: Any, state: dict, c: AdamWConfig
+                  ) -> tuple[Any, dict, dict]:
+    """One AdamW step; returns (new_params_bf16, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(c, step)
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+    is_moment_leaf = (lambda x: isinstance(x, dict) and "q" in x) \
+        if c.quantize_state else None
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * clip
+        if c.quantize_state:
+            m_f = _dequantize_signed(m, g.shape)
+            v_f = _dequantize_log(v, g.shape)
+        else:
+            m_f, v_f = m, v
+        m_f = c.b1 * m_f + (1 - c.b1) * g
+        v_f = c.b2 * v_f + (1 - c.b2) * g * g
+        mhat = m_f / b1c
+        vhat = v_f / b2c
+        new_master = master - lr * (
+            mhat / (jnp.sqrt(vhat) + c.eps) + c.weight_decay * master)
+        if c.quantize_state:
+            return new_master, _quantize_signed(m_f), _quantize_log(v_f)
+        return new_master, m_f, v_f
+
+    flat_g = jax.tree.leaves(grads)
+    flat_ma = jax.tree.leaves(state["master"])
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_moment_leaf)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_moment_leaf)
+    treedef = jax.tree.structure(grads)
+
+    out = [upd(g, ma, m, v)
+           for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback for the DP all-reduce.
+
+int8 block-quantized gradients (absmax per block) reduce the data-parallel
+all-reduce volume 4x (vs f32) / 2x (vs bf16); the quantization residual is
+carried in a per-leaf error-feedback buffer so the compression is unbiased
+over time (EF-SGD / 1-bit Adam lineage).
+
+Used by the trainer as an opt-in wrapper around the gradient tree *before*
+the (GSPMD-inserted or explicit) data-parallel reduction.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_leaf(g: jax.Array, err: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """g + err -> (q int8, scale, new_err)."""
+    x = g.astype(jnp.float32) + err
+    flat = x.reshape(-1)
+    pad = -flat.shape[0] % QBLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+                        / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:x.size].reshape(x.shape)
+    new_err = x - deq
+    return q, scale, new_err
+
+
+def decompress_leaf(q: jax.Array, scale: jax.Array,
+                    shape: tuple[int, ...]) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(grads: Any, err: Any) -> tuple[Any, Any]:
+    """Round-trips every leaf through int8 (+EF).  With GSPMD the reduced
+    tensor is the dequantized one; on real fleets the int8 payload is what
+    crosses DCN — here the volume saving is accounted analytically in
+    EXPERIMENTS.md §Perf."""
+    leaves, treedef = jax.tree.flatten(grads)
+    eleaves = jax.tree.leaves(err)
+    outs, errs = [], []
+    for g, e in zip(leaves, eleaves):
+        q, s, ne = compress_leaf(g, e)
+        outs.append(decompress_leaf(q, s, g.shape).astype(g.dtype))
+        errs.append(ne)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef,
+                                                                 errs)

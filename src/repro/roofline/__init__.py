@@ -1,0 +1,7 @@
+from .hlo import collective_stats, CollectiveStats, COLLECTIVE_OPS
+from .analysis import (Roofline, build_roofline, model_flops, n_params,
+                       n_active_params, PEAK_FLOPS_BF16, HBM_BW, ICI_LINK_BW)
+
+__all__ = ["collective_stats", "CollectiveStats", "COLLECTIVE_OPS",
+           "Roofline", "build_roofline", "model_flops", "n_params",
+           "n_active_params", "PEAK_FLOPS_BF16", "HBM_BW", "ICI_LINK_BW"]

@@ -1,0 +1,128 @@
+"""Collective-byte accounting from compiled HLO text.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+(post-SPMD-partitioning, per-device) HLO: build a symbol table of
+instruction result shapes, then sum operand bytes of every collective op,
+applying ring-algorithm wire multipliers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes appearing in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict            # op kind -> {count, operand_bytes, wire_bytes}
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(v["operand_bytes"] for v in self.ops.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(v["wire_bytes"] for v in self.ops.values())
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        ids = [x for x in first.split(",") if x.strip()]
+        if ids:
+            return len(ids)
+    return default
+
+
+def _wire_multiplier(kind: str, g: int) -> float:
+    """Per-device wire traffic as a multiple of per-device operand bytes
+    (ring algorithms)."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return float(g - 1)          # operand is the local shard
+    if kind == "reduce-scatter":
+        return (g - 1) / g
+    if kind == "all-to-all":
+        return (g - 1) / g
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Parse per-device collective traffic out of post-partitioning HLO."""
+    # Symbol table per computation: defs always precede uses inside one.
+    shapes: dict[str, int] = {}
+    ops: dict[str, dict] = {}
+
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type = everything before the opcode name
+        kind = next((k for k in COLLECTIVE_OPS
+                     if re.search(rf"\b{k}(-start|-done)?\(", rhs)), None)
+        # record result bytes (approximation: computations may reuse names;
+        # collectives live in the entry computation so collisions are rare)
+        type_end = rhs.find(" ")
+        result_bytes = _shape_bytes(rhs)
+        first_paren = rhs.find("(")
+        result_bytes = _shape_bytes(rhs[:first_paren if first_paren > 0
+                                        else len(rhs)])
+        shapes[name] = result_bytes
+
+        if kind is None or kind + "-done(" in rhs:
+            continue
+        # operand bytes: sum table lookups of %operands
+        inside = rhs[rhs.find("(") + 1:rhs.rfind(")")]
+        operand_bytes = 0
+        for op_m in re.finditer(r"%([\w.\-]+)", inside):
+            operand_bytes += shapes.get(op_m.group(1), 0)
+        if operand_bytes == 0:
+            operand_bytes = result_bytes       # fallback
+        g = _group_size(line, n_devices)
+        entry = ops.setdefault(kind, {"count": 0, "operand_bytes": 0.0,
+                                      "wire_bytes": 0.0})
+        entry["count"] += 1
+        entry["operand_bytes"] += operand_bytes
+        entry["wire_bytes"] += operand_bytes * _wire_multiplier(kind, g)
+
+    return CollectiveStats(ops=ops)

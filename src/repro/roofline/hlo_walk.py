@@ -1,0 +1,377 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scan-over-layers model is undercounted by ~n_layers (and nested scans
+multiply).  This walker parses the post-partitioning HLO text, builds the
+computation call graph (fusion / call / while / conditional), extracts while
+trip counts from the loop-condition constants, and returns corrected
+per-device totals:
+
+    flops           dot (2*K*prod(result)) + elementwise (1/elem)
+    bytes           per top-level instruction: operands + result (fusion
+                    internals elided — matching XLA's bytes-accessed model)
+    collectives     operand bytes and ring-wire bytes per op kind
+
+Validated against ``cost_analysis()`` on unrolled (loop-free) modules, where
+both must agree (tests/test_roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "logistic", "floor", "ceil", "sign", "expm1", "log-plus-one", "cosine",
+    "sine", "atan2", "remainder", "select", "clamp", "compare", "and", "or",
+    "xor", "not", "add_any",
+}
+_NO_TRAFFIC = {"tuple", "get-tuple-element", "bitcast", "parameter",
+               "constant", "after-all", "partition-id", "replica-id"}
+
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(
+    r"\s([a-z][a-z0-9\-]*(?:-start|-done)?)\(")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems, byts = 0, 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _result_type(rhs: str) -> str:
+    """The type string before the opcode."""
+    m = _OPCODE_RE.search(rhs)
+    return rhs[:m.start()] if m else rhs
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_operand: dict = dataclasses.field(default_factory=dict)
+    coll_wire: dict = dataclasses.field(default_factory=dict)
+    coll_count: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for d_self, d_o in ((self.coll_operand, other.coll_operand),
+                            (self.coll_wire, other.coll_wire),
+                            (self.coll_count, other.coll_count)):
+            for k, v in d_o.items():
+                d_self[k] = d_self.get(k, 0.0) + v * mult
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(self.coll_wire.values())
+
+    def collective_ops(self) -> dict:
+        return {k: {"count": self.coll_count.get(k, 0.0),
+                    "operand_bytes": self.coll_operand.get(k, 0.0),
+                    "wire_bytes": self.coll_wire.get(k, 0.0)}
+                for k in self.coll_wire}
+
+
+def _wire_multiplier(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    return {"all-reduce": 2.0 * (g - 1) / g,
+            "all-gather": float(g - 1),
+            "reduce-scatter": (g - 1) / g,
+            "all-to-all": (g - 1) / g,
+            "collective-permute": 1.0}.get(kind, 1.0)
+
+
+class HloModule:
+    def __init__(self, text: str, n_devices: int):
+        self.n_devices = n_devices
+        self.comps: dict[str, list[tuple[str, str]]] = {}
+        self.roots: dict[str, str] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._memo: dict[str, Totals] = {}
+        self._trip_memo: dict[str, int] = {}
+
+    def _parse(self, text: str) -> None:
+        current = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if current is None:
+                m = _COMP_HEADER_RE.match(line)
+                if m and line.rstrip().endswith("{"):
+                    current = m.group(1)
+                    self.comps[current] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = current
+                continue
+            if line.startswith("}"):
+                current = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                self.comps[current].append((m.group(1), m.group(2)))
+                if line.lstrip().startswith("ROOT"):
+                    self.roots[current] = m.group(2)
+
+    # -- trip counts ----------------------------------------------------------
+    def trip_count(self, cond_comp: str) -> int:
+        """Max integer constant in the loop condition computation."""
+        if cond_comp in self._trip_memo:
+            return self._trip_memo[cond_comp]
+        best = 1
+        stack = [cond_comp]
+        seen = set()
+        while stack:
+            c = stack.pop()
+            if c in seen or c not in self.comps:
+                continue
+            seen.add(c)
+            for _, rhs in self.comps[c]:
+                for m in _CONST_RE.finditer(rhs):
+                    best = max(best, int(m.group(1)))
+                cm = _CALLS_RE.search(rhs)
+                if cm:
+                    stack.append(cm.group(1))
+        self._trip_memo[cond_comp] = best
+        return best
+
+    # -- fusion parameter utilization ------------------------------------------
+    def _fusion_param_bytes(self, comp: str
+                            ) -> tuple[dict[int, float], float, bool]:
+        """Bytes actually read per parameter of a fused computation, plus
+        extra internal write traffic (dynamic-update-slice).
+
+        A parameter consumed ONLY by dynamic-slice ops is charged the slice
+        result sizes (a scan body reads one layer's weights per iteration,
+        not the whole stack); a parameter consumed only as the in-place
+        buffer of dynamic-update-slice is charged the update size.
+        """
+        key = f"pb|{comp}"
+        if key in self._memo:
+            return self._memo[key]
+        instrs = self.comps.get(comp, [])
+        symbols: dict[str, str] = {}
+        param_of: dict[str, int] = {}
+        full: dict[int, float] = {}
+        uses: dict[str, list[tuple[str, str, int]]] = {}
+        for name, rhs in instrs:
+            symbols[name] = _result_type(rhs)
+            pm = re.search(r"parameter\((\d+)\)", rhs)
+            if pm:
+                idx = int(pm.group(1))
+                param_of[name] = idx
+                full[idx] = _shape_elems_bytes(symbols[name])[1]
+            op_m = _OPCODE_RE.search(rhs)
+            if not op_m:
+                continue
+            opcode = op_m.group(1)
+            inside = rhs[op_m.end():]
+            for pos, ref in enumerate(re.finditer(r"%([\w.\-]+)", inside)):
+                uses.setdefault(ref.group(1), []).append(
+                    (name, opcode, pos))
+
+        charged: dict[int, float] = dict(full)
+        extra_write = 0.0
+        # in-place detection: a dynamic-update-slice whose buffer operand is
+        # a parameter means this fusion updates a carried buffer (scan ys /
+        # cache update) — the result aliases the input, so the call site
+        # must not charge the full result.
+        has_inplace_dus = False
+        for name, rhs in instrs:
+            if "dynamic-update-slice(" in rhs:
+                op_m = _OPCODE_RE.search(rhs)
+                refs = re.findall(r"%([\w.\-]+)", rhs[op_m.end():])
+                if refs and refs[0] in param_of:
+                    has_inplace_dus = True
+        for pname, idx in param_of.items():
+            ulist = uses.get(pname, [])
+            if not ulist:
+                charged[idx] = 0.0
+                continue
+            sliced = 0.0
+            ok = True
+            for uname, uop, pos in ulist:
+                if uop == "dynamic-slice" and pos == 0:
+                    sliced += _shape_elems_bytes(symbols.get(uname, ""))[1]
+                elif uop == "dynamic-update-slice" and pos == 0:
+                    # in-place buffer: charge nothing here; the update
+                    # operand itself is charged when we see the DUS result
+                    pass
+                else:
+                    ok = False
+                    break
+            if ok:
+                charged[idx] = sliced
+        # internal DUS write traffic: update operand size (read + write)
+        for name, rhs in instrs:
+            if "dynamic-update-slice(" in rhs:
+                op_m = _OPCODE_RE.search(rhs)
+                inside = rhs[op_m.end():]
+                refs = re.findall(r"%([\w.\-]+)", inside)
+                if len(refs) >= 2:
+                    extra_write += 2.0 * _shape_elems_bytes(
+                        symbols.get(refs[1], ""))[1]
+        self._memo[key] = (charged, extra_write, has_inplace_dus)
+        return charged, extra_write, has_inplace_dus
+
+    # -- totals ---------------------------------------------------------------
+    def totals(self, comp: str | None = None, top_level: bool = True
+               ) -> Totals:
+        comp = comp or self.entry
+        key = f"{comp}|{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        t = Totals()
+        symbols: dict[str, str] = {}
+        for name, rhs in self.comps.get(comp, []):
+            op_m = _OPCODE_RE.search(rhs)
+            opcode = op_m.group(1) if op_m else ""
+            rtype = _result_type(rhs)
+            symbols[name] = rtype
+            relems, rbytes = _shape_elems_bytes(rtype)
+
+            base = opcode.replace("-start", "").replace("-done", "")
+            if opcode.endswith("-done"):
+                continue
+
+            # operand accounting
+            operand_bytes = 0
+            if op_m:
+                inside = rhs[op_m.end():]
+                depth = 1
+                end = 0
+                for i, ch in enumerate(inside):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                for ref in re.finditer(r"%([\w.\-]+)", inside[:end]):
+                    operand_bytes += _shape_elems_bytes(
+                        symbols.get(ref.group(1), ""))[1]
+
+            if base in COLLECTIVES:
+                g_m = _GROUPS_RE.search(rhs)
+                g = int(g_m.group(2)) if g_m else self.n_devices
+                ob = operand_bytes or rbytes
+                t.coll_operand[base] = t.coll_operand.get(base, 0.0) + ob
+                t.coll_wire[base] = (t.coll_wire.get(base, 0.0)
+                                     + ob * _wire_multiplier(base, g))
+                t.coll_count[base] = t.coll_count.get(base, 0.0) + 1
+                t.bytes += operand_bytes + rbytes
+                continue
+
+            if opcode == "while":
+                cb = _COND_BODY_RE.search(rhs)
+                if cb:
+                    trips = self.trip_count(cb.group(1))
+                    t.add(self.totals(cb.group(2), True), trips)
+                    t.add(self.totals(cb.group(1), True), trips)
+                continue
+            if opcode == "conditional":
+                br = _BRANCHES_RE.search(rhs)
+                if br:
+                    subs = [self.totals(b.strip().lstrip("%"), True)
+                            for b in br.group(1).split(",")]
+                    if subs:
+                        big = max(subs, key=lambda s: s.flops + s.bytes)
+                        t.add(big)
+                continue
+            if opcode in ("fusion", "call", "async-start"):
+                cm = _CALLS_RE.search(rhs)
+                if cm:
+                    called = cm.group(1)
+                    sub = self.totals(called, False)
+                    t.flops += sub.flops
+                    # collectives inside calls still count
+                    t.add(Totals(coll_operand=sub.coll_operand,
+                                 coll_wire=sub.coll_wire,
+                                 coll_count=sub.coll_count))
+                    if opcode == "fusion":
+                        charged, extra_w, inplace = \
+                            self._fusion_param_bytes(called)
+                        fused_in = sum(charged.values())
+                        t.bytes += fused_in + extra_w \
+                            + (0.0 if inplace else rbytes)
+                        continue
+                t.bytes += operand_bytes + rbytes
+                continue
+
+            if opcode == "dynamic-slice":
+                t.bytes += 2.0 * rbytes          # read slice + write result
+                continue
+            if opcode == "dynamic-update-slice":
+                inside = rhs[op_m.end():]
+                refs = re.findall(r"%([\w.\-]+)", inside)
+                upd = (_shape_elems_bytes(symbols.get(refs[1], ""))[1]
+                       if len(refs) >= 2 else rbytes)
+                t.bytes += 2.0 * upd
+                continue
+
+            if opcode == "dot":
+                k = 1
+                cdims = _CONTRACT_RE.search(rhs)
+                lhs_ref = re.search(r"%([\w.\-]+)", rhs[op_m.end():])
+                if cdims and lhs_ref:
+                    lhs_type = symbols.get(lhs_ref.group(1), "")
+                    sm = _SHAPE_RE.search(lhs_type)
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",") if d]
+                        for ci in cdims.group(1).split(","):
+                            if ci:
+                                k *= dims[int(ci)]
+                t.flops += 2.0 * k * relems
+                t.bytes += operand_bytes + rbytes
+                continue
+            if opcode == "convolution":
+                t.flops += 2.0 * relems  # underestimate; not used by models
+                t.bytes += operand_bytes + rbytes
+                continue
+
+            if base in _ELEMENTWISE:
+                t.flops += relems
+            if opcode == "reduce" or opcode == "reduce-window":
+                # reduction flops ~ operand elements
+                t.flops += operand_bytes / 4.0
+            if opcode in _NO_TRAFFIC:
+                continue
+            t.bytes += operand_bytes + rbytes
+
+        self._memo[key] = t
+        return t
+
+
+def walk(hlo_text: str, n_devices: int) -> Totals:
+    return HloModule(hlo_text, n_devices).totals()

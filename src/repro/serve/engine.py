@@ -1,0 +1,49 @@
+"""Batched serving: prefill once, decode step-by-step with donated caches."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ArchDef
+from repro.sharding import ShardCtx
+
+
+class ServeEngine:
+    def __init__(self, arch: ArchDef, params: Any, mesh=None,
+                 max_len: int = 512):
+        self.arch = arch
+        self.cfg = arch.cfg
+        self.params = params
+        self.ctx = ShardCtx(mesh)
+        self.max_len = max_len
+
+        self._prefill = jax.jit(functools.partial(
+            arch.prefill, cfg=self.cfg, ctx=self.ctx, max_len=max_len))
+        self._decode = jax.jit(functools.partial(
+            arch.decode, cfg=self.cfg, ctx=self.ctx), donate_argnums=(1,))
+
+    def generate(self, batch: dict, n_tokens: int,
+                 temperature: float = 0.0, key=None) -> jax.Array:
+        """Greedy/temperature sampling; returns (B, n_tokens) int32."""
+        state, length, logits = self._prefill(self.params, batch)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        outs = []
+        tok = self._sample(logits[:, -1], temperature, key)
+        for i in range(n_tokens):
+            outs.append(tok)
+            state, length, logits = self._decode(self.params, state, length,
+                                                 tok)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1], temperature, sub)
+        return jnp.concatenate(outs, axis=-1).reshape(
+            -1, n_tokens)
+
+    @staticmethod
+    def _sample(logits: jax.Array, temperature: float, key) -> jax.Array:
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]

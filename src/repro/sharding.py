@@ -1,0 +1,109 @@
+"""Logical-axis sharding: the bridge from model code to mesh axes.
+
+Model code annotates parameters and activations with *logical* axes; this
+module resolves them onto the physical mesh.  The resolution embodies the
+Casper data-mapping lesson (§4.2): every tensor axis is split into
+*contiguous blocks per device* so that communication happens only at block
+boundaries (collectives), never per-element.
+
+Logical axes:
+  dp    data parallel (batch dim)                -> ("pod", "data")
+  fsdp  fully-sharded parameter dim              -> ("pod", "data")
+  tp    tensor parallel (heads / ffn / vocab)    -> "model"
+  ep    expert parallel (MoE expert dim)         -> "model"
+  sp    sequence parallel (long-context KV/state)-> "data"
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _mesh_axes(mesh: Mesh, logical: str) -> Any:
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    table = {
+        "dp": ("pod", "data") if has_pod else ("data",),
+        "fsdp": ("pod", "data") if has_pod else ("data",),
+        "tp": "model",
+        "ep": "model",
+        "sp": "data",
+        # Megatron-style sequence parallelism: the residual stream's seq dim
+        # shards over the TP group between attention/MLP regions (all-gather
+        # on entry, reduce-scatter on exit — GSPMD inserts both).
+        "seq": "model",
+    }
+    return table[logical]
+
+
+def resolve(mesh: Mesh, logical: Sequence[str | None],
+            shape: Sequence[int] | None = None,
+            overrides: dict | None = None) -> P:
+    """Logical axis names -> PartitionSpec on ``mesh``.
+
+    With ``shape``, axes that do not divide the dimension are dropped
+    (replicated) — e.g. 4 KV heads on 16-way TP replicate, Megatron-style;
+    batch=1 long-context cells replicate the batch dim.  ``overrides`` remap
+    logical axes (e.g. {"fsdp": None} for TP-only serving params).
+    """
+    entries = []
+    for d, a in enumerate(logical):
+        if overrides and a in overrides:
+            a = overrides[a]
+        if a is None:
+            entries.append(None)
+            continue
+        axes = _mesh_axes(mesh, a)
+        if shape is not None:
+            size = 1
+            for ax in ((axes,) if isinstance(axes, str) else axes):
+                size *= mesh.shape[ax]
+            if shape[d] % size != 0:
+                entries.append(None)
+                continue
+        entries.append(axes)
+    return P(*entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carried through model code; resolves logical constraints.
+
+    ``mesh=None`` (single-device smoke tests) turns every constraint into a
+    no-op, so model code is mesh-agnostic.  ``overrides`` remap logical axes
+    (e.g. {"fsdp": None} for TP-only serving).
+    """
+
+    mesh: Mesh | None = None
+    overrides: dict | None = None
+
+    def pspec(self, *logical: str | None) -> P | None:
+        if self.mesh is None:
+            return None
+        return resolve(self.mesh, logical, None, self.overrides)
+
+    def constrain(self, x: jax.Array, *logical: str | None) -> jax.Array:
+        if self.mesh is None:
+            return x
+        sh = NamedSharding(self.mesh,
+                           resolve(self.mesh, logical, x.shape,
+                                   self.overrides))
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    def sharding(self, *logical: str | None) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh,
+                             resolve(self.mesh, logical, None,
+                                     self.overrides))
+
+
+def dp_size(mesh: Mesh) -> int:
+    names = mesh.axis_names
+    n = mesh.shape["data"]
+    if "pod" in names:
+        n *= mesh.shape["pod"]
+    return n

@@ -1,0 +1,4 @@
+from .loop import InjectedFailure, Trainer, TrainLoopConfig, make_train_step
+
+__all__ = ["InjectedFailure", "Trainer", "TrainLoopConfig",
+           "make_train_step"]

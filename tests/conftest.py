@@ -1,0 +1,13 @@
+import os
+
+# Tests see the single real CPU device; multi-device tests spawn subprocesses
+# with their own XLA_FLAGS (never set the 512-device flag globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

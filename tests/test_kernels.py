@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PAPER_STENCILS
+from repro.core import ref as cref
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+SHAPES = {
+    1: [(256,), (1000,), (4096,)],
+    2: [(64, 128), (70, 300), (128, 256)],
+    3: [(8, 16, 64), (9, 20, 150)],
+}
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 0.07}
+
+
+@pytest.mark.parametrize("name", list(PAPER_STENCILS))
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_stencil_kernels_match_oracle(name, dtype, rng):
+    spec = PAPER_STENCILS[name]
+    for shape in SHAPES[spec.ndim]:
+        g = jnp.asarray(rng.standard_normal(shape), dtype)
+        got = ops.stencil_apply(spec, g)
+        want = cref.apply_stencil(spec, g.astype(jnp.float32))
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want)))
+        assert err < TOL[dtype], (name, dtype, shape, err)
+        assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("tile", [64, 128, 512])
+def test_stencil1d_tile_sweep(tile, rng):
+    spec = PAPER_STENCILS["7pt1d"]
+    g = jnp.asarray(rng.standard_normal((777,)), jnp.float32)
+    got = ops.stencil_apply(spec, g, tile=tile)
+    want = cref.apply_stencil(spec, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [(8, 128), (16, 64), (32, 256)])
+def test_stencil2d_tile_sweep(tile, rng):
+    spec = PAPER_STENCILS["blur2d"]
+    g = jnp.asarray(rng.standard_normal((100, 200)), jnp.float32)
+    got = ops.stencil_apply(spec, g, tile=tile)
+    want = cref.apply_stencil(spec, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@given(
+    b=st.integers(1, 2), hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]), s=st.sampled_from([64, 96, 128]),
+    d=st.sampled_from([16, 32]), w=st.sampled_from([8, 32, 64]),
+    softcap=st.sampled_from([None, 50.0]), seed=st.integers(0, 1 << 30),
+)
+@settings(max_examples=12, deadline=None)
+def test_swa_kernel_property(b, hkv, g, s, d, w, softcap, seed):
+    """Sliding-window attention kernel == dense masked oracle across GQA
+    group sizes, window widths, softcap, and non-divisible tiles."""
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    hq = hkv * g
+    q = jax.random.normal(kq, (b, hq, s, d), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, s, d), jnp.float32)
+    got = ops.swa(q, k, v, window=w, tq=32, softcap=softcap)
+    want = kref.swa_ref(q, k, v, window=w, softcap=softcap)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+def test_swa_equals_causal_when_window_covers_all(rng):
+    b, h, s, d = 1, 2, 64, 16
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    got = ops.swa(q, k, v, window=s, tq=32)
+    want = kref.swa_ref(q, k, v, window=s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_engine_pallas_backend_matches_ref(rng):
+    from repro.core import CasperEngine, jacobi2d
+    g = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    e_ref = CasperEngine(jacobi2d(), backend="ref")
+    e_pl = CasperEngine(jacobi2d(), backend="pallas")
+    np.testing.assert_allclose(np.asarray(e_pl.run(g, iters=3)),
+                               np.asarray(e_ref.run(g, iters=3)), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_swa_kernel_bf16(dtype, rng):
+    """bf16 SWA matches the f32 oracle within bf16 tolerance."""
+    b, hq, hkv, s, d, w = 1, 4, 2, 128, 32, 32
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    got = ops.swa(q, k, v, window=w, tq=32).astype(jnp.float32)
+    want = kref.swa_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), window=w)
+    assert float(jnp.max(jnp.abs(got - want))) < 0.08
+
+
+def test_stencil3d_nondivisible_and_tiny(rng):
+    """Grids smaller than one tile and with awkward remainders."""
+    spec = PAPER_STENCILS["heat3d"]
+    for shape in [(3, 5, 7), (4, 16, 129), (5, 17, 128)]:
+        g = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        got = ops.stencil_apply(spec, g, tile=(4, 8, 64))
+        want = cref.apply_stencil(spec, g)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)

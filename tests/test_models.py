@@ -1,0 +1,145 @@
+"""Per-arch smoke tests (reduced configs) + model-level invariants."""
+import dataclasses
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import ShapeCell, make_arch, make_batch
+from repro.models.common import init_params, param_count
+from repro.sharding import ShardCtx
+
+CTX = ShardCtx(None)
+SMOKE = ShapeCell("smoke", 32, 2, "train")
+
+
+def _setup(arch_id):
+    cfg = get_config(arch_id, reduced=True)
+    arch = make_arch(cfg)
+    params = init_params(jax.random.PRNGKey(0), arch.param_specs(cfg))
+    return cfg, arch, params
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_train_step(arch_id):
+    """Reduced config: one forward + backward; shapes + finiteness."""
+    cfg, arch, params = _setup(arch_id)
+    batch = make_batch(cfg, SMOKE)
+    (loss, metrics), grads = jax.value_and_grad(
+        arch.loss, has_aux=True)(params, batch, cfg, CTX)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_decode_matches_prefill(arch_id):
+    """Teacher-forced decode logits == prefill logits (KV-cache correctness).
+
+    This is the strongest single invariant of the serving path: it exercises
+    caches, positions, masks and (for ssm/hybrid) recurrent states.
+    """
+    cfg, arch, params = _setup(arch_id)
+    key = jax.random.PRNGKey(1)
+    b, s = 2, 12
+    tokens = jax.random.randint(key, (b, s + 1), 0, cfg.vocab,
+                                dtype=jnp.int32)
+    batch = {"tokens": tokens[:, :s]}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (b, 16, cfg.d_model),
+                                            jnp.float32).astype(jnp.bfloat16)
+    if cfg.n_patches:
+        batch["patch_embeds"] = jax.random.normal(
+            key, (b, cfg.n_patches, cfg.d_model), jnp.float32) \
+            .astype(jnp.bfloat16)
+    state, length, logits_prefill = arch.prefill(params, batch, cfg, CTX,
+                                                 max_len=s + 8)
+    state, length, logits_step = arch.decode(params, state, length,
+                                             tokens[:, s:s + 1], cfg, CTX)
+    # reference: prefill over s+1 tokens
+    batch2 = dict(batch, tokens=tokens[:, :s + 1])
+    _, _, logits_ref = arch.prefill(params, batch2, cfg, CTX, max_len=s + 8)
+    err = float(jnp.max(jnp.abs(logits_step[:, -1] - logits_ref[:, -1])))
+    assert err < 5e-2, (arch_id, err)
+
+
+def test_full_configs_match_assignment():
+    """The full (non-reduced) configs carry the exact published shapes."""
+    expect = {
+        "zamba2-7b": dict(n_layers=81, d_model=3584, n_heads=32, n_kv=32,
+                          d_ff=14336, vocab=32000),
+        "internvl2-76b": dict(n_layers=80, d_model=8192, n_heads=64, n_kv=8,
+                              d_ff=28672, vocab=128256),
+        "qwen3-14b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv=8,
+                          d_ff=17408, vocab=151936),
+        "yi-9b": dict(n_layers=48, d_model=4096, n_heads=32, n_kv=4,
+                      d_ff=11008, vocab=64000),
+        "gemma2-27b": dict(n_layers=46, d_model=4608, n_heads=32, n_kv=16,
+                           d_ff=36864, vocab=256000),
+        "nemotron-4-340b": dict(n_layers=96, d_model=18432, n_heads=96,
+                                n_kv=8, d_ff=73728, vocab=256000),
+        "xlstm-125m": dict(n_layers=12, d_model=768, n_heads=4, n_kv=4,
+                           d_ff=0, vocab=50304),
+        "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6, n_kv=6,
+                             d_ff=1536, vocab=51865),
+        "olmoe-1b-7b": dict(n_layers=16, d_model=2048, n_heads=16, n_kv=16,
+                            vocab=50304),
+        "qwen2-moe-a2.7b": dict(n_layers=24, d_model=2048, n_heads=16,
+                                n_kv=16, vocab=151936),
+    }
+    for arch_id, fields in expect.items():
+        cfg = get_config(arch_id)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch_id, k, getattr(cfg, k), v)
+    # MoE specifics
+    m = get_config("olmoe-1b-7b").moe
+    assert (m.n_experts, m.top_k, m.d_expert) == (64, 8, 1024)
+    m = get_config("qwen2-moe-a2.7b").moe
+    assert (m.n_experts, m.top_k, m.d_expert, m.n_shared) == (60, 4, 1408, 4)
+    assert get_config("zamba2-7b").ssm.d_state == 64
+    assert get_config("gemma2-27b").window == 4096
+    assert get_config("gemma2-27b").layer_pattern == ("local", "global")
+    assert get_config("nemotron-4-340b").act == "sqrelu"
+
+
+def test_param_counts_in_expected_range():
+    """Total parameter counts should be in the ballpark the names claim."""
+    expect_b = {"yi-9b": (8, 10), "qwen3-14b": (13, 16),
+                "gemma2-27b": (25, 30), "nemotron-4-340b": (320, 360),
+                "internvl2-76b": (68, 78), "zamba2-7b": (6, 9),
+                "olmoe-1b-7b": (6, 8), "qwen2-moe-a2.7b": (13, 16),
+                "xlstm-125m": (0.1, 0.2), "whisper-tiny": (0.02, 0.08)}
+    for arch_id, (lo, hi) in expect_b.items():
+        cfg = get_config(arch_id)
+        arch = make_arch(cfg)
+        n = param_count(arch.param_specs(cfg)) / 1e9
+        assert lo <= n <= hi, (arch_id, n)
+
+
+def test_gemma2_softcap_applied():
+    cfg = get_config("gemma2-27b", reduced=True)
+    arch = make_arch(cfg)
+    params = init_params(jax.random.PRNGKey(0), arch.param_specs(cfg))
+    batch = make_batch(cfg, SMOKE)
+    # blow up an embedding: final logits must stay within the softcap
+    params["embed"] = params["embed"] * 100.0
+    state, _, logits = arch.prefill(params, {"tokens": batch["tokens"][:, :8]},
+                                    cfg, ShardCtx(None), max_len=16)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_softcap + 1e-3
+
+
+def test_vlm_patch_embeds_change_logits():
+    cfg = get_config("internvl2-76b", reduced=True)
+    arch = make_arch(cfg)
+    params = init_params(jax.random.PRNGKey(0), arch.param_specs(cfg))
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab, jnp.int32)
+    pe1 = jnp.zeros((2, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    pe2 = jnp.ones((2, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    l1, _ = arch.loss(params, {"tokens": tokens, "patch_embeds": pe1}, cfg,
+                      CTX)
+    l2, _ = arch.loss(params, {"tokens": tokens, "patch_embeds": pe2}, cfg,
+                      CTX)
+    assert abs(float(l1) - float(l2)) > 1e-6

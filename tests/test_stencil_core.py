@@ -1,0 +1,134 @@
+"""Core stencil engine: spec / oracle / ISA / VM / segment mapping."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PAPER_STENCILS, SegmentConfig, StencilSpec, assemble,
+                        decode, access_counts, plan_streams, remote_fraction)
+from repro.core import ref, vm
+from repro.core.streams import MAX_SHIFT
+
+
+SMALL_SHAPES = {1: (64,), 2: (16, 12), 3: (8, 7, 6)}
+
+
+@pytest.mark.parametrize("name", list(PAPER_STENCILS))
+def test_oracles_agree(name, rng):
+    spec = PAPER_STENCILS[name]
+    g = rng.standard_normal(SMALL_SHAPES[spec.ndim])
+    want = ref.apply_stencil_loops(spec, g)
+    np.testing.assert_allclose(ref.apply_stencil_numpy(spec, g), want,
+                               atol=1e-12)
+    np.testing.assert_allclose(
+        np.asarray(ref.apply_stencil(spec, jnp.asarray(g))), want, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", list(PAPER_STENCILS))
+def test_vm_executes_isa_exactly(name, rng):
+    """The software SPU running the assembled 15-bit program must equal the
+    oracle bit-for-bit in f64 (instruction semantics, shifts, ctrl bits)."""
+    spec = PAPER_STENCILS[name]
+    g = rng.standard_normal(SMALL_SHAPES[spec.ndim])
+    out, counters = vm.run_program(spec, g)
+    np.testing.assert_allclose(out, ref.apply_stencil_numpy(spec, g),
+                               atol=1e-12)
+    assert counters.instructions > 0
+    assert counters.stores > 0
+
+
+@pytest.mark.parametrize("name", list(PAPER_STENCILS))
+def test_isa_roundtrip_and_ctrl_bits(name):
+    prog = assemble(PAPER_STENCILS[name])
+    instrs = prog.instrs
+    # encode/decode roundtrip
+    for i in instrs:
+        assert decode(i.encode()) == i
+        assert 0 <= i.encode() < (1 << 15)
+    # exactly one clear_acc (first) and one enable_out (last)
+    assert instrs[0].clear_acc and not any(i.clear_acc for i in instrs[1:])
+    assert instrs[-1].enable_out and not any(i.enable_out
+                                             for i in instrs[:-1])
+    # every stream advanced exactly once
+    advanced = [i.stream for i in instrs if i.advance]
+    assert sorted(advanced) == sorted({t.stream for t in prog.plan.taps})
+    # fits the instruction buffer
+    assert prog.n_instrs <= 64
+
+
+@given(
+    ndim=st.integers(1, 3),
+    radius=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_random_stencils_property(ndim, radius, seed):
+    """Random specs: VM == numpy oracle == jnp oracle; plan within ISA caps."""
+    r = np.random.default_rng(seed)
+    offsets = set()
+    n_taps = int(r.integers(1, 8))
+    for _ in range(n_taps):
+        offsets.add(tuple(int(x) for x in r.integers(-radius, radius + 1,
+                                                     ndim)))
+    taps = tuple((o, float(r.uniform(-1, 1))) for o in sorted(offsets))
+    spec = StencilSpec("rand", ndim, taps)
+    shape = {1: (33,), 2: (9, 11), 3: (5, 6, 7)}[ndim]
+    g = r.standard_normal(shape)
+    want = ref.apply_stencil_numpy(spec, g)
+    out, _ = vm.run_program(spec, g)
+    np.testing.assert_allclose(out, want, atol=1e-12)
+    got = np.asarray(ref.apply_stencil(spec, jnp.asarray(g)))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_stream_plan_matches_paper_jacobi2d():
+    """Fig. 8/9: Jacobi-2D uses 3 input streams and 5 instructions, with the
+    middle row served by one stream plus +/-1 shifts."""
+    plan = plan_streams(PAPER_STENCILS["jacobi2d"])
+    assert plan.n_input_streams == 3
+    assert len(plan.taps) == 5
+    middle = [t for t in plan.taps if t.offset[0] == 0]
+    assert len({t.stream for t in middle}) == 1
+    assert sorted(t.shift for t in middle) == [-1, 0, 1]
+    assert all(abs(t.shift) <= MAX_SHIFT for t in plan.taps)
+
+
+def test_unaligned_load_accounting():
+    """Fig. 4: vectorized Jacobi-1D needs 6 loads/3 MACs without the
+    unaligned-load hardware, 4 with it."""
+    prog = assemble(PAPER_STENCILS["jacobi1d"])
+    loads = prog.loads_per_vector()
+    assert loads["with_casper"] == 4       # 3 taps + 1 store
+    assert loads["without_casper"] == 6    # 2 shifted taps cost 2 each
+    assert loads["unaligned"] == 2
+
+
+def test_blocked_mapping_reduces_remote_access():
+    """§4.2: the linear block hash keeps neighbors in the same slice."""
+    for name in ("jacobi1d", "7pt1d", "jacobi2d", "blur2d"):
+        spec = PAPER_STENCILS[name]
+        shape = {1: (1 << 20,), 2: (1024, 1024)}[spec.ndim]
+        rb = remote_fraction(spec, shape, SegmentConfig(mapping="blocked"))
+        rs = remote_fraction(spec, shape, SegmentConfig(mapping="striped"))
+        assert rb < rs, (name, rb, rs)
+
+
+def test_jacobi1d_blocked_remote_only_at_boundaries():
+    spec = PAPER_STENCILS["jacobi1d"]
+    cfg = SegmentConfig(mapping="blocked")
+    counts = access_counts(spec, (1 << 20,), cfg)
+    # 1 element per block boundary per side; 64 blocks of 16384 elements
+    n_blocks = (1 << 20) // cfg.block_elems
+    assert counts["remote"] <= 2 * n_blocks
+
+
+def test_time_stepping_matches_reference(rng):
+    from repro.core import run_iterations
+    spec = PAPER_STENCILS["jacobi2d"]
+    g = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    out = run_iterations(spec, g, 5)
+    expect = g
+    for _ in range(5):
+        expect = ref.apply_stencil(spec, expect)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5)

@@ -1,0 +1,203 @@
+"""Optimizer / checkpoint / data / trainer fault-tolerance tests."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpointing import (CheckpointManager, latest_step,
+                                 restore_checkpoint, save_checkpoint)
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig, batch_for_step, host_shard
+from repro.models import make_arch
+from repro.optim import AdamWConfig, apply_updates, init_opt_state, schedule
+from repro.optim.adamw import (_dequantize_log, _dequantize_signed,
+                               _quantize_log, _quantize_signed)
+from repro.optim import compress
+from repro.train import InjectedFailure, Trainer, TrainLoopConfig
+
+
+# --- optimizer ----------------------------------------------------------------
+def test_adamw_matches_reference_formula():
+    c = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.01,
+                    warmup_steps=0, total_steps=10**9, grad_clip=1e9)
+    p = {"w": jnp.asarray([[1.0, -2.0]], jnp.float32)}
+    g = {"w": jnp.asarray([[0.5, 0.25]], jnp.float32)}
+    st_ = init_opt_state(p, c)
+    newp, st_, _ = apply_updates(p, g, st_, c)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    want = (np.asarray(p["w"])
+            - 0.1 * (mhat / (np.sqrt(vhat) + 1e-8)
+                     + 0.01 * np.asarray(p["w"])))
+    np.testing.assert_allclose(np.asarray(newp["w"]), want, atol=1e-5)
+
+
+def test_lr_schedule_warmup_and_cosine():
+    c = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                    min_lr_frac=0.1)
+    assert float(schedule(c, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(schedule(c, jnp.int32(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(schedule(c, jnp.int32(110))) == pytest.approx(0.1, abs=1e-3)
+
+
+@given(seed=st.integers(0, 1 << 30), scale=st.floats(-10, 2))
+@settings(max_examples=20, deadline=None)
+def test_log_quantization_relative_error_bound(seed, scale):
+    r = np.random.default_rng(seed)
+    v = jnp.asarray(np.abs(r.standard_normal((7, 300))) * 10.0 ** scale,
+                    jnp.float32)
+    deq = _dequantize_log(_quantize_log(v), v.shape)
+    rel = np.abs(np.asarray(deq) - np.asarray(v)) / (np.asarray(v) + 1e-30)
+    # 128 levels over the block's log-range; generous bound
+    assert rel.max() < 0.25
+
+
+def test_signed_quantization_error_bound(rng):
+    m = jnp.asarray(rng.standard_normal((1000,)), jnp.float32)
+    deq = _dequantize_signed(_quantize_signed(m), m.shape)
+    blockmax = float(jnp.max(jnp.abs(m)))
+    assert float(jnp.max(jnp.abs(deq - m))) <= blockmax / 127.0 + 1e-7
+
+
+def test_quantized_adamw_converges_like_fp32(rng):
+    target = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+
+    def run(quant):
+        c = AdamWConfig(lr=0.05, warmup_steps=0, total_steps=10**9,
+                        weight_decay=0.0, quantize_state=quant)
+        p = {"w": jnp.zeros((32, 32), jnp.float32)}
+        s = init_opt_state(p, c)
+        for _ in range(200):
+            g = {"w": p["w"] - target}
+            p, s, _ = apply_updates(p, g, s, c)
+        return float(jnp.mean((p["w"] - target) ** 2))
+
+    assert run(True) < 10 * max(run(False), 1e-6)
+
+
+def test_grad_compression_error_feedback_is_unbiased(rng):
+    """Sum of compressed grads + final error == sum of raw grads."""
+    g_list = [jnp.asarray(rng.standard_normal((64,)) * 1e-3, jnp.float32)
+              for _ in range(20)]
+    err = jnp.zeros((64,), jnp.float32)
+    total = jnp.zeros((64,), jnp.float32)
+    for g in g_list:
+        q, s, err = compress.compress_leaf(g, err)
+        total = total + compress.decompress_leaf(q, s, g.shape)
+    want = sum(np.asarray(g) for g in g_list)
+    np.testing.assert_allclose(np.asarray(total + err), want, atol=1e-5)
+
+
+# --- checkpointing ------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {"a": jnp.asarray(rng.standard_normal((4, 6)), jnp.bfloat16),
+            "b": {"c": jnp.arange(7, dtype=jnp.int32),
+                  "d": jnp.asarray(1.5, jnp.float32)}}
+    save_checkpoint(str(tmp_path), 3, tree)
+    assert latest_step(str(tmp_path)) == 3
+    got = restore_checkpoint(str(tmp_path), 3, tree)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partial_checkpoint_is_skipped(tmp_path, rng):
+    tree = {"a": jnp.zeros((2,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    # simulate a torn write: step 2 loses its COMMIT marker
+    os.remove(os.path.join(str(tmp_path), "step_00000002", "COMMIT"))
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_corrupt_checkpoint_detected(tmp_path):
+    tree = {"a": jnp.arange(256, dtype=jnp.float32)}
+    d = save_checkpoint(str(tmp_path), 1, tree)
+    shard = os.path.join(d, "shard_0.npz")
+    np.savez(shard, leaf_0=np.zeros(256, np.float32))
+    with pytest.raises(IOError):
+        restore_checkpoint(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros((2,), jnp.float32)}
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, tree)
+    mgr.wait()
+    mgr._gc()
+    steps = sorted(n for n in os.listdir(str(tmp_path))
+                   if n.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+# --- data ----------------------------------------------------------------------
+def test_data_is_deterministic_and_step_dependent():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=1)
+    b1 = batch_for_step(cfg, 7)
+    b2 = batch_for_step(cfg, 7)
+    b3 = batch_for_step(cfg, 8)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert int(jnp.max(b1["tokens"])) < 100
+
+
+def test_host_shard_partitions_batch():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=8, seed=0)
+    b = batch_for_step(cfg, 0)
+    parts = [host_shard(b, i, 4)["tokens"] for i in range(4)]
+    stacked = jnp.concatenate(parts, axis=0)
+    np.testing.assert_array_equal(np.asarray(stacked),
+                                  np.asarray(b["tokens"]))
+
+
+# --- trainer fault tolerance ----------------------------------------------------
+def _trainer(tmp, **kw):
+    cfg = get_config("yi-9b", reduced=True)
+    arch = make_arch(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    lc = TrainLoopConfig(ckpt_dir=str(tmp), log_every=2, **kw)
+    return Trainer(arch, opt, lc)
+
+
+def test_trainer_restart_after_injected_failure(tmp_path):
+    tr = _trainer(tmp_path, total_steps=10, ckpt_every=4,
+                  inject_failure_at=7)
+    with pytest.raises(InjectedFailure):
+        tr.run()
+    tr.ckpt.wait()
+    # "new process": resumes from step 4 and finishes
+    tr2 = _trainer(tmp_path, total_steps=10, ckpt_every=4)
+    hist = tr2.run()
+    assert tr2.step == 10
+    assert any(e["kind"] == "resume" and e["step"] == 4
+               for e in tr2.events)
+
+
+def test_trainer_resume_replays_same_data(tmp_path):
+    """Stateless data: the resumed run consumes the exact same batch at the
+    same step as an uninterrupted run."""
+    cfg = DataConfig(vocab=256, seq_len=64, global_batch=8, seed=0)
+    b_direct = batch_for_step(cfg, 6)
+    tr = _trainer(tmp_path, total_steps=6, ckpt_every=6)
+    tr.run()
+    tr2 = _trainer(tmp_path, total_steps=8, ckpt_every=8)
+    assert tr2.try_resume() and tr2.step == 6
+    b_resumed = batch_for_step(tr2.data_cfg, tr2.step)
+    assert b_resumed["tokens"].shape == (8, 64)
+
+
+def test_straggler_watchdog_records_events(tmp_path, monkeypatch):
+    tr = _trainer(tmp_path, total_steps=1, ckpt_every=100,
+                  watchdog_min_history=2, watchdog_factor=1.0)
+    tr.init_state()
+    tr._step_times = [1e-9] * 8      # force an impossible deadline
+    tr.run_step()
+    assert any(e["kind"] == "straggler" for e in tr.events)
