@@ -1,0 +1,56 @@
+"""CI smoke run: the model-only benches plus a tiny-grid engine parity
+check, in well under a minute on a laptop CPU.
+
+The full harness (``benchmarks/run.py``) also runs measured-wallclock and
+256-device subprocess benches; this entry point keeps CI fast and
+deterministic while still touching every model path and the Pallas
+engine end to end.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)                       # the benchmarks package
+sys.path.insert(0, os.path.join(_ROOT, "src"))  # repro
+
+import numpy as np  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks.paper_figs import (fig01_roofline, fig10_speedup,  # noqa: E402
+                                   fig11_energy, fig12_gpu, fig13_pims,
+                                   table4_instructions, temporal_blocking)
+
+SMOKE_BENCHES = (fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu,
+                 fig13_pims, table4_instructions, temporal_blocking)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    n_rows = 0
+    for bench in SMOKE_BENCHES:
+        rows, detail = bench()
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}")
+        n_rows += len(rows)
+        if bench is temporal_blocking:
+            assert detail["summary"]["parity_max_err_t4"] < 1e-5, detail
+            assert detail["summary"]["mean_traffic_reduction_t4"] > 2.0
+
+    # tiny end-to-end engine run (Pallas interpret mode)
+    from repro.core import CasperEngine, jacobi2d
+    from repro.core import ref as cref
+    g = jnp.asarray(np.random.default_rng(0).standard_normal((48, 64)),
+                    jnp.float32)
+    eng = CasperEngine(jacobi2d(), backend="pallas", sweeps=2, tile="auto")
+    got = eng.run(g, iters=5)
+    want = cref.run_iterations(jacobi2d(), g, 5)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 1e-5, err
+    print(f"# smoke OK: {n_rows} rows, engine parity err {err:.2e}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

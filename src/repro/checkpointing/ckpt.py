@@ -27,7 +27,8 @@ _SHARD_BYTES = 1 << 30
 
 
 def _flatten_with_paths(tree: Any):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in jax>=0.5; use tree_util.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = [jax.tree_util.keystr(k) for k, _ in flat]
     leaves = [v for _, v in flat]
     return paths, leaves, treedef

@@ -6,8 +6,15 @@ Composes the pieces the way the paper's API (Table 1) does:
     out    = engine.run(grid, iters=100)        # single host/device
     step   = engine.distributed_fn(mesh, ("sx", "sy"))   # multi-device
 
-The assembled Casper program (ISA) is available as ``engine.program`` and is
-what `initStencilcode` would broadcast to the SPUs.
+New in the unified-engine refactor: ``sweeps=t`` applies temporal
+blocking — the Pallas backend fuses ``t`` Jacobi applications per kernel
+invocation (one HBM read/write per point per ``t`` sweeps instead of per
+sweep), and ``run(grid, iters)`` decomposes ``iters`` into fused blocks
+plus an exact remainder.  ``tile="auto"`` picks the block shape with the
+:mod:`repro.kernels.tune` autotuner the first time a grid shape is seen.
+
+The assembled Casper program (ISA) is available as ``engine.program`` and
+is what `initStencilcode` would broadcast to the SPUs.
 """
 from __future__ import annotations
 
@@ -33,37 +40,66 @@ class CasperEngine:
         backend: Backend = "ref",
         segment: SegmentConfig | None = None,
         interpret: bool = True,
+        sweeps: int = 1,
+        tile: Sequence[int] | Literal["auto"] | None = None,
     ):
+        if sweeps < 1:
+            raise ValueError(f"sweeps must be >= 1, got {sweeps}")
         self.spec = spec
         self.backend = backend
         self.segment = segment or SegmentConfig()
         self.interpret = interpret
+        self.sweeps = sweeps
+        self.tile = tile
         self.program: Program = assemble(spec)
-        self._step = self._build_step()
+        self._step = self._build_step(sweeps)
 
-    def _build_step(self) -> Callable[[jax.Array], jax.Array]:
+    def _resolve_tile(self, shape: tuple[int, ...], itemsize: int,
+                      sweeps: int):
+        if self.tile == "auto":
+            from repro.kernels import tune  # lazy: optional dep
+            return tune.autotune(self.spec, shape, sweeps=sweeps,
+                                 itemsize=itemsize).tile
+        return self.tile
+
+    def _build_step(self, sweeps: int) -> Callable[[jax.Array], jax.Array]:
         if self.backend == "ref":
-            return functools.partial(_ref.apply_stencil, self.spec)
+            def ref_step(grid):
+                for _ in range(sweeps):
+                    grid = _ref.apply_stencil(self.spec, grid)
+                return grid
+            return ref_step
         if self.backend == "pallas":
             from repro.kernels import ops as kops  # lazy: optional dep
-            return functools.partial(kops.stencil_apply, self.spec,
-                                     interpret=self.interpret)
+            def pallas_step(grid):
+                tile = self._resolve_tile(grid.shape, grid.dtype.itemsize,
+                                          sweeps)
+                return kops.stencil_apply(
+                    self.spec, grid, tile=tile,
+                    sweeps=sweeps, interpret=self.interpret)
+            return pallas_step
         raise ValueError(f"unknown backend {self.backend!r}")
 
     def step(self, grid: jax.Array) -> jax.Array:
+        """One fused block: ``self.sweeps`` stencil applications."""
         return self._step(grid)
 
     @functools.cached_property
     def _run_jit(self):
         @functools.partial(jax.jit, static_argnames=("iters",))
         def run(grid, iters: int):
+            q, r = divmod(iters, self.sweeps)
             def body(g, _):
                 return self._step(g), None
-            out, _ = jax.lax.scan(body, grid, None, length=iters)
+            out, _ = jax.lax.scan(body, grid, None, length=q)
+            if r:
+                out = self._build_step(r)(out)
             return out
         return run
 
     def run(self, grid: jax.Array, iters: int = 1) -> jax.Array:
+        """``iters`` total stencil applications (fused ``sweeps`` at a
+        time; any remainder runs as one narrower fused call)."""
         return self._run_jit(grid, iters=iters)
 
     def distributed_fn(self, mesh, grid_axes: Sequence[str | None],

@@ -198,6 +198,68 @@ def casper_sweep(
 
 
 # ----------------------------------------------------------------------------
+# TPU-side tile cost model (drives the Pallas autotuner, kernels/tune.py)
+# ----------------------------------------------------------------------------
+# v5e figures. HBM matches repro.roofline.HBM_BW (single source for the
+# roofline benches; duplicated here so perfmodel stays import-light).
+TPU_HBM_BW = 819e9
+TPU_VMEM_BYTES = 16 * 1024 * 1024    # per-core VMEM (Pallas guide)
+TPU_VPU_FLOPS_F32 = 4.9e12           # element-wise f32 peak; CALIBRATED:
+                                     # 8x128 lanes x 2 ops x ~0.6 util @ 4 GHz-
+                                     # equivalent issue; only the traffic term
+                                     # ever binds for paper stencils (Fig. 1)
+TPU_GRID_STEP_S = 2e-7               # per-grid-step sequencing overhead;
+                                     # CALIBRATED: favors tiles >= a few KB,
+                                     # same role as GPU_LAUNCH_S above
+VPU_SUBLANES, VPU_LANES = 8, 128     # f32 min tile (sublane x lane)
+
+
+def _ceil_to(x: int, grain: int) -> int:
+    return -(-x // grain) * grain
+
+
+def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
+                     tile: tuple[int, ...], sweeps: int = 1,
+                     itemsize: int = 4) -> float:
+    """Predicted seconds for ``sweeps`` fused applications over ``shape``
+    with output block ``tile`` (the kernels/engine.py temporal-blocking
+    kernel).  Returns ``inf`` when the VMEM working set cannot fit.
+
+    First-order bottleneck model in the style of the Casper/CPU models
+    above: time = max(HBM traffic, VPU compute) + grid sequencing.  The
+    traffic term charges each tile one window read (halo widened to
+    ``sweeps*halo``) plus one tile write; the compute term charges every
+    intermediate application at its shrinking window size, padded up to
+    the VPU (sublane, lane) grain so misaligned tiles pay for the lanes
+    they waste.
+    """
+    halo = spec.halo
+    n_tiles = math.prod(-(-n // t) for n, t in zip(shape, tile))
+    acc_itemsize = max(itemsize, 4)
+
+    window = math.prod(t + 2 * sweeps * h for t, h in zip(tile, halo))
+    # Resident set: fetched window + same-size accumulator + output block.
+    vmem = 2 * window * acc_itemsize + math.prod(tile) * itemsize
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+
+    traffic = n_tiles * (window + math.prod(tile)) * itemsize
+    t_mem = traffic / TPU_HBM_BW
+
+    def padded_points(layers: int) -> int:
+        dims = [t + 2 * layers * h for t, h in zip(tile, halo)]
+        dims[-1] = _ceil_to(dims[-1], VPU_LANES)
+        if len(dims) >= 2:
+            dims[-2] = _ceil_to(dims[-2], VPU_SUBLANES)
+        return math.prod(dims)
+
+    flops = sum(padded_points(sweeps - 1 - s) * spec.flops_per_point()
+                for s in range(sweeps)) * n_tiles
+    t_compute = flops / TPU_VPU_FLOPS_F32
+    return max(t_mem, t_compute) + n_tiles * TPU_GRID_STEP_S
+
+
+# ----------------------------------------------------------------------------
 # GPU / PIMS models
 # ----------------------------------------------------------------------------
 def gpu_sweep(spec: StencilSpec, shape: tuple[int, ...]) -> SweepCost:

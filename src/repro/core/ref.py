@@ -13,6 +13,35 @@ import jax.numpy as jnp
 from .stencil import StencilSpec
 
 
+def tap_sum(windows, coeffs, dtype) -> jax.Array:
+    """``sum_k coeffs[k] * windows[k]`` with a *defined* f64 order.
+
+    XLA's simplifier regroups floating-point add chains, and two
+    independently compiled programs (this oracle under jit vs the Pallas
+    engine's tile-local graphs) can pick different groupings, breaking
+    bit-identity at 1 ulp — ``optimization_barrier`` does not survive
+    CPU backend simplification.  For float64, the validation dtype, the
+    products are materialized and summed through a ``fori_loop`` carry:
+    XLA cannot reassociate across loop iterations, so every
+    implementation that routes its accumulation through this helper
+    agrees bit-for-bit, including the pure-numpy oracle.  Narrower
+    dtypes keep the plain chain (stencils are bandwidth-bound, the
+    regrouping is perf-irrelevant, and f32/bf16 parity is
+    tolerance-checked anyway).
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(jnp.float64):
+        prods = jnp.stack([jnp.asarray(c, dtype) * w
+                           for c, w in zip(coeffs, windows)])
+        return jax.lax.fori_loop(
+            0, len(coeffs), lambda i, acc: acc + prods[i],
+            jnp.zeros_like(prods[0]))
+    acc = jnp.zeros(windows[0].shape, dtype)
+    for c, w in zip(coeffs, windows):
+        acc = acc + jnp.asarray(c, dtype) * w
+    return acc
+
+
 def apply_stencil(spec: StencilSpec, grid: jax.Array) -> jax.Array:
     """out[p] = sum_k c_k * in[p + off_k], zero boundary; one sweep."""
     if grid.ndim != spec.ndim:
@@ -20,12 +49,12 @@ def apply_stencil(spec: StencilSpec, grid: jax.Array) -> jax.Array:
     halo = spec.halo
     pad = [(h, h) for h in halo]
     padded = jnp.pad(grid, pad)
-    out = jnp.zeros_like(grid)
-    for off, coeff in spec.taps:
-        start = tuple(h + o for h, o in zip(halo, off))
-        window = jax.lax.dynamic_slice(padded, start, grid.shape)
-        out = out + jnp.asarray(coeff, grid.dtype) * window
-    return out
+    windows = [
+        jax.lax.dynamic_slice(
+            padded, tuple(h + o for h, o in zip(halo, off)), grid.shape)
+        for off, _ in spec.taps
+    ]
+    return tap_sum(windows, spec.coeffs, grid.dtype)
 
 
 def run_iterations(spec: StencilSpec, grid: jax.Array, iters: int) -> jax.Array:

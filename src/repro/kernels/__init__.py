@@ -1,9 +1,34 @@
-"""Pallas TPU kernels (validated with interpret=True on CPU)."""
-from .stencil1d import stencil1d
-from .stencil2d import stencil2d
-from .stencil3d import stencil3d
-from .swa import sliding_window_attention
-from . import ops, ref
+"""Pallas TPU kernels (validated with interpret=True on CPU).
 
-__all__ = ["stencil1d", "stencil2d", "stencil3d",
-           "sliding_window_attention", "ops", "ref"]
+The per-rank stencil kernels of the seed (`stencil1d/2d/3d`) are now thin
+compat shims over the unified N-D temporal-blocking engine in
+:mod:`repro.kernels.engine`; new code should call
+``engine.stencil_apply(spec, grid, tile=..., sweeps=...)`` directly or go
+through :class:`repro.core.engine.CasperEngine`.
+"""
+from . import engine, ops, ref, tune
+from .engine import stencil_apply, stencil_sweep, run_sweeps, hbm_traffic
+from .swa import sliding_window_attention
+from .tune import autotune, autotune_measured
+
+
+def stencil1d(spec, grid, tile: int = 512, interpret: bool = True):
+    """Compat shim for the seed's 1-D kernel (one sweep)."""
+    return engine.stencil_sweep(spec, grid, tile=(tile,), interpret=interpret)
+
+
+def stencil2d(spec, grid, tile=(32, 256), interpret: bool = True):
+    """Compat shim for the seed's 2-D kernel (one sweep)."""
+    return engine.stencil_sweep(spec, grid, tile=tile, interpret=interpret)
+
+
+def stencil3d(spec, grid, tile=(4, 16, 128), interpret: bool = True):
+    """Compat shim for the seed's 3-D kernel (one sweep)."""
+    return engine.stencil_sweep(spec, grid, tile=tile, interpret=interpret)
+
+
+__all__ = ["engine", "ops", "ref", "tune",
+           "stencil_apply", "stencil_sweep", "run_sweeps", "hbm_traffic",
+           "autotune", "autotune_measured",
+           "stencil1d", "stencil2d", "stencil3d",
+           "sliding_window_attention"]

@@ -6,24 +6,21 @@ import functools
 import jax
 
 from repro.core.stencil import StencilSpec
-from .stencil1d import stencil1d
-from .stencil2d import stencil2d
-from .stencil3d import stencil3d
+from . import engine
 from .swa import sliding_window_attention
 
 
 def stencil_apply(spec: StencilSpec, grid: jax.Array,
-                  tile=None, interpret: bool = True) -> jax.Array:
-    """One sweep of ``spec`` via the Pallas kernels; zero boundary."""
-    fn = {1: stencil1d, 2: stencil2d, 3: stencil3d}[spec.ndim]
-    kwargs = {"interpret": interpret}
-    if tile is not None:
-        kwargs["tile"] = tile
-    return fn(spec, grid, **kwargs)
+                  tile=None, sweeps: int = 1,
+                  interpret: bool = True) -> jax.Array:
+    """``sweeps`` fused applications of ``spec`` via the unified engine;
+    zero boundary; accepts an optional leading batch dimension."""
+    return engine.stencil_apply(spec, grid, tile=tile, sweeps=sweeps,
+                                interpret=interpret)
 
 
 stencil_apply_jit = jax.jit(
-    stencil_apply, static_argnames=("spec", "tile", "interpret"))
+    stencil_apply, static_argnames=("spec", "tile", "sweeps", "interpret"))
 
 swa = jax.jit(
     functools.partial(sliding_window_attention),

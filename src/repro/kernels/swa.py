@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .engine import element_blockspec
+
 NEG_INF = -1e30
 
 
@@ -87,10 +89,12 @@ def sliding_window_attention(
         grid=(b, hkv, sp // tq),
         in_specs=[
             pl.BlockSpec((1, 1, g, tq, d), lambda b_, h, i: (b_, h, 0, i, 0)),
-            pl.BlockSpec((1, 1, pl.Element(kw), d),
-                         lambda b_, h, i: (b_, h, i * tq, 0)),
-            pl.BlockSpec((1, 1, pl.Element(kw), d),
-                         lambda b_, h, i: (b_, h, i * tq, 0)),
+            # element-offset windows (version-portable spelling; size-1
+            # and full dims map identically under both conventions)
+            element_blockspec((1, 1, kw, d),
+                              lambda b_, h, i: (b_, h, i * tq, 0)),
+            element_blockspec((1, 1, kw, d),
+                              lambda b_, h, i: (b_, h, i * tq, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, g, tq, d),
                                lambda b_, h, i: (b_, h, 0, i, 0)),

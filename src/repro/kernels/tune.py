@@ -1,0 +1,102 @@
+"""Tile-shape autotuner for the unified stencil engine.
+
+Ranks candidate output tiles with the first-order TPU cost model in
+:mod:`repro.core.perfmodel` (``pallas_tile_cost``): HBM-traffic vs VPU
+roofline, VMEM-capacity feasibility, lane-alignment padding, and
+per-grid-step sequencing overhead.  The analytic pass is free, so it runs
+for every (spec, shape, sweeps) the engine sees; ``measure=True``
+additionally wall-clocks the top analytic candidates on the real array
+(interpret mode on CPU, compiled on TPU) and re-ranks by measurement.
+
+The candidate lists keep the innermost dimension a multiple of 128 (VPU
+lane width) and the second-minor a multiple of 8 (f32 sublanes); rank-1
+tiles are lane multiples.  See docs/kernels.md for how to extend them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Sequence
+
+from repro.core import perfmodel as pm
+from repro.core.stencil import StencilSpec
+
+CANDIDATE_TILES: dict[int, tuple[tuple[int, ...], ...]] = {
+    1: ((256,), (512,), (1024,), (2048,), (4096,), (8192,)),
+    2: ((8, 128), (8, 256), (16, 128), (16, 256), (32, 128), (32, 256),
+        (32, 512), (64, 256), (8, 512)),
+    3: ((2, 16, 128), (4, 8, 128), (4, 16, 128), (8, 16, 128),
+        (4, 16, 256), (8, 8, 128), (4, 32, 128), (2, 32, 256)),
+}
+
+
+def candidate_tiles(ndim: int,
+                    shape: Sequence[int] | None = None
+                    ) -> tuple[tuple[int, ...], ...]:
+    """Candidates for ``ndim``, dropping tiles absurdly larger than the
+    grid (a tile more than 4x the padded extent wastes every lane)."""
+    cands = CANDIDATE_TILES[ndim]
+    if shape is None:
+        return cands
+    kept = tuple(t for t in cands
+                 if all(td <= 4 * nd for td, nd in zip(t, shape)))
+    return kept or cands[:1]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    tile: tuple[int, ...]
+    cost_s: float                       # analytic (or measured) seconds
+    table: tuple[tuple[tuple[int, ...], float], ...]   # all (tile, cost)
+    measured: bool = False
+
+    def as_dict(self) -> dict:
+        return {
+            "tile": list(self.tile),
+            "cost_s": self.cost_s,
+            "measured": self.measured,
+            "table": [{"tile": list(t), "cost_s": c} for t, c in self.table],
+        }
+
+
+@functools.lru_cache(maxsize=512)
+def autotune(spec: StencilSpec, shape: tuple[int, ...], sweeps: int = 1,
+             itemsize: int = 4) -> TuneResult:
+    """Best tile for (spec, shape, sweeps) under the analytic cost model."""
+    shape = tuple(shape)
+    scored = sorted(
+        ((tile, pm.pallas_tile_cost(spec, shape, tile, sweeps=sweeps,
+                                    itemsize=itemsize))
+         for tile in candidate_tiles(spec.ndim, shape)),
+        key=lambda tc: tc[1])
+    best, cost = scored[0]
+    if math.isinf(cost):
+        raise ValueError(
+            f"no candidate tile fits VMEM for {spec.name} sweeps={sweeps}")
+    return TuneResult(best, cost, tuple(scored))
+
+
+def autotune_measured(spec: StencilSpec, grid, sweeps: int = 1,
+                      top_k: int = 3, reps: int = 2,
+                      interpret: bool = True) -> TuneResult:
+    """Re-rank the ``top_k`` analytic candidates by wall clock on ``grid``."""
+    from . import engine  # local import: tune is importable without jax use
+
+    analytic = autotune(spec, tuple(grid.shape), sweeps=sweeps,
+                        itemsize=grid.dtype.itemsize)
+    finite = [(t, c) for t, c in analytic.table if math.isfinite(c)]
+    timed = []
+    for tile, _ in finite[:top_k]:
+        fn = functools.partial(engine.stencil_apply, spec, tile=tile,
+                               sweeps=sweeps, interpret=interpret)
+        fn(grid).block_until_ready()            # warm up / compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(grid)
+        out.block_until_ready()
+        timed.append((tile, (time.perf_counter() - t0) / reps))
+    timed.sort(key=lambda tc: tc[1])
+    best, cost = timed[0]
+    return TuneResult(best, cost, tuple(timed), measured=True)

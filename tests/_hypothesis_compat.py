@@ -1,0 +1,81 @@
+"""`hypothesis` shim: real library when installed, deterministic fallback
+sweep otherwise.
+
+`hypothesis` is an *optional* dev dependency (see pyproject.toml).  Test
+modules import ``given``, ``settings`` and ``st`` from here instead of
+from ``hypothesis`` directly, so the suite still runs — property tests
+degrade to a fixed-seed random sweep of ``max_examples`` draws — in
+environments where it is not installed.
+
+The fallback implements only the strategy surface this repo uses:
+``st.integers``, ``st.floats``, ``st.booleans``, ``st.sampled_from``.
+Add to `_Strategy` if a new test needs more, or just install hypothesis.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # deterministic fallback sweep
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    st = _St()
+
+    class settings:  # noqa: N801 - mirrors hypothesis' API
+        """Records ``max_examples``; every other knob is ignored."""
+
+        def __init__(self, max_examples: int = 10, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._compat_max_examples = self.max_examples
+            return fn
+
+    def given(**strategies):
+        """Run the test body over ``max_examples`` fixed-seed draws."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", 10)
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # hide the drawn parameters from pytest's fixture resolution
+            # (functools.wraps' __wrapped__ would expose fn's signature)
+            del wrapper.__wrapped__
+            params = [p for name, p in inspect.signature(fn).parameters.items()
+                      if name not in strategies]
+            wrapper.__signature__ = inspect.Signature(params)
+            return wrapper
+        return deco

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.moe import MoeCfg, moe_ffn, moe_param_specs
 from repro.models.common import init_params

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.mamba2 import ssd_chunked, ssd_step
 from repro.models.xlstm import mlstm_chunked, mlstm_sequential

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (PAPER_STENCILS, SegmentConfig, StencilSpec, assemble,
                         decode, access_counts, plan_streams, remote_fraction)
