@@ -1,15 +1,20 @@
 """CI smoke run: the model-only benches plus a tiny-grid engine parity
-check, in well under a minute on a laptop CPU.
+check, an 8-forced-host-device distributed temporal-blocking check, and
+the serve determinism/decode-count check — a couple of minutes on a
+laptop CPU.
 
 The full harness (``benchmarks/run.py``) also runs measured-wallclock and
 256-device subprocess benches; this entry point keeps CI fast and
-deterministic while still touching every model path and the Pallas
-engine end to end.
+deterministic while still touching every model path, the Pallas engine,
+and the distributed deep-halo path end to end.
 """
 from __future__ import annotations
 
+import json
 import os
+import subprocess
 import sys
+import textwrap
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)                       # the benchmarks package
@@ -24,6 +29,96 @@ from benchmarks.paper_figs import (fig01_roofline, fig10_speedup,  # noqa: E402
 
 SMOKE_BENCHES = (fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu,
                  fig13_pims, table4_instructions, temporal_blocking)
+
+
+_DIST_CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import CasperEngine, heat3d
+    from repro.core import ref as cref
+    from repro.roofline import hlo_walk
+
+    spec = heat3d()
+    mesh = jax.make_mesh((4, 2), ("sx", "sy"))
+    axes = ("sx", "sy", None)
+    shape, iters = (16, 16, 8), 8
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(shape),
+                    jnp.float32)
+    gs = jax.device_put(g, NamedSharding(mesh, P(*axes)))
+    x = jax.ShapeDtypeStruct(shape, jnp.float32,
+                             sharding=NamedSharding(mesh, P(*axes)))
+
+    eng = CasperEngine(spec, sweeps=4)
+    fused = eng.distributed_fn(mesh, axes, iters=iters)
+    err = float(jnp.max(jnp.abs(
+        fused(gs) - cref.run_iterations(spec, g, iters))))
+    launches = {}
+    for mode, fn in (("fused", fused),
+                     ("unfused", eng.distributed_fn(mesh, axes, iters=iters,
+                                                    sweeps=1))):
+        t = hlo_walk.walk(fn.lower(x).compile().as_text(), 8)
+        launches[mode] = t.coll_count.get("collective-permute", 0.0)
+    print("RESULT" + json.dumps({"err": err, "launches": launches}))
+""")
+
+
+def distributed_smoke() -> dict:
+    """Fused ``sweeps=4`` heat3d on 8 forced host devices (the 4-wide deep
+    halo exactly spans a whole 4-point shard on ``sx`` — the halo==block
+    single-hop boundary case; multi-hop is covered by
+    tests/test_distributed.py) must match the single-device oracle and
+    show ~4x fewer collective-permute launches than the unfused path."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _DIST_CODE],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    line = next(l for l in proc.stdout.splitlines() if l.startswith("RESULT"))
+    data = json.loads(line[len("RESULT"):])
+    assert data["err"] < 1e-5, data
+    red = data["launches"]["unfused"] / max(data["launches"]["fused"], 1.0)
+    assert red >= 3.0, data
+    return {"parity_err": data["err"], "launch_reduction": red}
+
+
+def serve_smoke() -> dict:
+    """Serve determinism: same key -> same tokens, and exactly
+    ``n_tokens - 1`` jitted decode steps per generate call."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import make_arch
+    from repro.models.common import init_params
+    from repro.serve import ServeEngine
+
+    cfg = get_config("qwen3-14b", reduced=True)
+    arch = make_arch(cfg)
+    params = init_params(jax.random.PRNGKey(0), arch.param_specs(cfg))
+    eng = ServeEngine(arch, params, max_len=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab,
+                                 dtype=jnp.int32)
+    calls = {"n": 0}
+    orig = eng._decode
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    eng._decode = counting
+    n_tokens = 5
+    k = jax.random.PRNGKey(2)
+    a = eng.generate({"tokens": prompts}, n_tokens, temperature=1.0, key=k)
+    b = eng.generate({"tokens": prompts}, n_tokens, temperature=1.0, key=k)
+    assert bool(jnp.all(a == b)), "non-deterministic generate for fixed key"
+    assert calls["n"] == 2 * (n_tokens - 1), calls
+    return {"decode_calls_per_generate": calls["n"] // 2,
+            "n_tokens": n_tokens}
 
 
 def main() -> None:
@@ -48,8 +143,15 @@ def main() -> None:
     want = cref.run_iterations(jacobi2d(), g, 5)
     err = float(jnp.max(jnp.abs(got - want)))
     assert err < 1e-5, err
-    print(f"# smoke OK: {n_rows} rows, engine parity err {err:.2e}",
-          file=sys.stderr)
+
+    dist = distributed_smoke()
+    print(f"distributed_smoke_heat3d_t4_launch_reduction,0.000,"
+          f"{dist['launch_reduction']:.1f}")
+    srv = serve_smoke()
+    print(f"serve_smoke_decode_calls,0.000,"
+          f"{srv['decode_calls_per_generate']}")
+    print(f"# smoke OK: {n_rows} rows, engine parity err {err:.2e}, "
+          f"distributed {dist}, serve {srv}", file=sys.stderr)
 
 
 if __name__ == "__main__":

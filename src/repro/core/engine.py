@@ -53,6 +53,18 @@ class CasperEngine:
         self.tile = tile
         self.program: Program = assemble(spec)
         self._step = self._build_step(sweeps)
+        self._frozen = True
+
+    def __setattr__(self, name, value):
+        # run() caches its jitted loop (cached_property) closing over the
+        # init-time sweeps/backend/tile; mutating them afterwards would
+        # silently keep executing stale fused blocks.  The engine is
+        # therefore frozen: construct a new engine to change options.
+        if getattr(self, "_frozen", False):
+            raise AttributeError(
+                f"CasperEngine is frozen; cannot set {name!r} after init — "
+                "construct a new engine instead")
+        super().__setattr__(name, value)
 
     def _resolve_tile(self, shape: tuple[int, ...], itemsize: int,
                       sweeps: int):
@@ -102,10 +114,27 @@ class CasperEngine:
         time; any remainder runs as one narrower fused call)."""
         return self._run_jit(grid, iters=iters)
 
+    _INHERIT = object()   # tile sentinel: None is itself a legal tile value
+
     def distributed_fn(self, mesh, grid_axes: Sequence[str | None],
-                       iters: int = 1):
-        """Jitted multi-device step on ``mesh`` (see core.halo)."""
-        return distributed_stencil_fn(self.spec, mesh, grid_axes, iters)
+                       iters: int = 1, *,
+                       sweeps: int | None = None,
+                       backend: Backend | None = None,
+                       tile=_INHERIT):
+        """Jitted multi-device function on ``mesh`` (see core.halo).
+
+        Inherits the engine's ``sweeps``/``backend``/``tile`` unless
+        overridden, so temporal blocking (deep halo exchange + fused
+        shard-local sweeps) and the Pallas backend apply in the
+        distributed path exactly as in :meth:`run`; ``iters`` decomposes
+        as ``q*sweeps + r`` the same way.
+        """
+        return distributed_stencil_fn(
+            self.spec, mesh, grid_axes, iters,
+            sweeps=self.sweeps if sweeps is None else sweeps,
+            backend=self.backend if backend is None else backend,
+            tile=self.tile if tile is CasperEngine._INHERIT else tile,
+            interpret=self.interpret)
 
     # Casper API surface (Table 1), as thin documentation shims -------------
     def init_stencil_segment(self, size_bytes: int) -> SegmentConfig:

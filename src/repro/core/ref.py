@@ -42,6 +42,52 @@ def tap_sum(windows, coeffs, dtype) -> jax.Array:
     return acc
 
 
+def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
+                         sweeps: int, starts, grid_shape,
+                         acc_dtype) -> jax.Array:
+    """Apply ``sweeps`` fused stencil applications to one widened window.
+
+    ``window`` carries ``sweeps`` halo layers per side around an
+    ``out_shape`` interior whose origin sits at global coordinate
+    ``starts`` of a ``grid_shape`` grid; application ``s`` consumes one
+    layer, so the intermediate after it has ``sweeps-1-s`` layers left
+    and the final result is exactly ``out_shape``.
+
+    Between applications, elements whose *global* coordinate falls
+    outside the true grid are masked back to zero — the closed form of
+    the oracle re-padding with zeros before every sweep — which also
+    kills values leaking in from any out-of-grid padding around the
+    window.  Accumulation routes through :func:`tap_sum`, so f64 results
+    stay bit-identical to chained :func:`apply_stencil` calls.
+
+    This is the shared core of the Pallas kernel (``starts`` =
+    ``program_id * tile``) and the distributed shard-local path
+    (``starts`` = the shard's global offset, a traced ``axis_index``
+    value); ``out_shape``/``grid_shape``/``halo`` must be static.
+    """
+    ndim = len(out_shape)
+    coeffs = [c for _, c in taps]
+    x = window.astype(acc_dtype)
+    for s in range(sweeps):
+        rem = sweeps - 1 - s          # halo layers left after this sweep
+        cur = tuple(t + 2 * rem * h for t, h in zip(out_shape, halo))
+        acc = tap_sum(
+            [jax.lax.dynamic_slice(
+                x, tuple(h + o for h, o in zip(halo, off)), cur)
+             for off, _ in taps],
+            coeffs, acc_dtype)
+        if rem:
+            valid = None
+            for d in range(ndim):
+                g0 = starts[d] - rem * halo[d]
+                coords = g0 + jax.lax.broadcasted_iota(jnp.int32, cur, d)
+                vd = (coords >= 0) & (coords < grid_shape[d])
+                valid = vd if valid is None else valid & vd
+            acc = jnp.where(valid, acc, jnp.zeros_like(acc))
+        x = acc
+    return x
+
+
 def apply_stencil(spec: StencilSpec, grid: jax.Array) -> jax.Array:
     """out[p] = sum_k c_k * in[p + off_k], zero boundary; one sweep."""
     if grid.ndim != spec.ndim:

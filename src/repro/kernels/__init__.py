@@ -7,7 +7,8 @@ compat shims over the unified N-D temporal-blocking engine in
 through :class:`repro.core.engine.CasperEngine`.
 """
 from . import engine, ops, ref, tune
-from .engine import stencil_apply, stencil_sweep, run_sweeps, hbm_traffic
+from .engine import (stencil_apply, stencil_sweep, stencil_window_sweep,
+                     run_sweeps, hbm_traffic)
 from .swa import sliding_window_attention
 from .tune import autotune, autotune_measured
 
@@ -28,7 +29,8 @@ def stencil3d(spec, grid, tile=(4, 16, 128), interpret: bool = True):
 
 
 __all__ = ["engine", "ops", "ref", "tune",
-           "stencil_apply", "stencil_sweep", "run_sweeps", "hbm_traffic",
+           "stencil_apply", "stencil_sweep", "stencil_window_sweep",
+           "run_sweeps", "hbm_traffic",
            "autotune", "autotune_measured",
            "stencil1d", "stencil2d", "stencil3d",
            "sliding_window_attention"]

@@ -77,40 +77,90 @@ def _acc_dtype(dtype) -> jnp.dtype:
     return jnp.dtype(dtype)
 
 
-def _kernel(x_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape, acc_dtype):
+def _kernel(x_ref, org_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
+            acc_dtype):
     """Apply ``sweeps`` fused stencil applications to one resident window.
 
-    The window enters with ``sweeps`` halo layers per side; application
-    ``s`` consumes one layer, so the intermediate after it has
-    ``sweeps-1-s`` layers left and the final result is exactly ``tile``.
+    The window enters with ``sweeps`` halo layers per side; the masked
+    multi-sweep core (:func:`repro.core.ref.masked_window_sweeps`)
+    consumes one layer per application and re-zeros intermediates that
+    fall outside the true grid (which also kills values leaking in from
+    the tile-alignment pad).  ``org_ref`` holds the global coordinate of
+    the whole window-call's interior origin — zeros for a single-device
+    grid, the shard offset in the distributed path — so the masking uses
+    *global* coordinates.  ref.tap_sum (inside the core) pins the f64
+    accumulation order, keeping the engine bit-identical to the oracle
+    in the validation dtype.
     """
     ndim = len(tile)
-    x = x_ref[...].astype(acc_dtype)
-    starts = tuple(pl.program_id(d) * tile[d] for d in range(ndim))
-    for s in range(sweeps):
-        rem = sweeps - 1 - s          # halo layers left after this sweep
-        cur = tuple(t + 2 * rem * h for t, h in zip(tile, halo))
-        # ref.tap_sum pins the f64 accumulation order, so the engine is
-        # bit-identical to the core.ref oracle in the validation dtype.
-        acc = _ref.tap_sum(
-            [jax.lax.dynamic_slice(
-                x, tuple(h + o for h, o in zip(halo, off)), cur)
-             for off, _ in taps],
-            [c for _, c in taps], acc_dtype)
-        if rem:
-            # Zero-boundary between fused sweeps: any intermediate point
-            # outside the true grid must read as zero in the next sweep
-            # (the oracle re-pads with zeros each application).  This
-            # also kills values leaking in from the tile-alignment pad.
-            valid = None
-            for d in range(ndim):
-                g0 = starts[d] - rem * halo[d]
-                coords = g0 + jax.lax.broadcasted_iota(jnp.int32, cur, d)
-                vd = (coords >= 0) & (coords < grid_shape[d])
-                valid = vd if valid is None else valid & vd
-            acc = jnp.where(valid, acc, jnp.zeros_like(acc))
-        x = acc
-    o_ref[...] = x.astype(o_ref.dtype)
+    starts = tuple(org_ref[d] + pl.program_id(d) * tile[d]
+                   for d in range(ndim))
+    o_ref[...] = _ref.masked_window_sweeps(
+        x_ref[...], taps, halo, tile, sweeps, starts, grid_shape,
+        acc_dtype).astype(o_ref.dtype)
+
+
+def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
+                         out_shape: Sequence[int],
+                         origin,
+                         grid_shape: Sequence[int],
+                         tile: Sequence[int] | int | None = None,
+                         sweeps: int = 1,
+                         interpret: bool = True) -> jax.Array:
+    """``sweeps`` fused applications to a block that already carries its
+    ``sweeps*halo``-wide halo.
+
+    ``window`` has shape ``out_shape + 2*sweeps*halo`` per dim; the
+    interior's origin sits at global coordinate ``origin`` (static ints
+    or a traced value, e.g. ``axis_index`` inside shard_map) of a
+    ``grid_shape`` grid, against which the zero-boundary masking between
+    fused sweeps is evaluated.  This is the shard-local entry point of
+    the distributed deep-halo path; :func:`stencil_sweep` wraps it for
+    the single-device case (zero origin, window = zero-padded grid).
+    """
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    if tile is None:
+        tile = DEFAULT_TILES[spec.ndim]
+    elif isinstance(tile, int):
+        tile = (tile,)
+    tile = tuple(int(t) for t in tile)
+    if len(tile) != spec.ndim:
+        raise ValueError(f"tile rank {len(tile)} != spec ndim {spec.ndim}")
+    halo = spec.halo
+    out_shape = tuple(out_shape)
+    grid_shape = tuple(int(n) for n in grid_shape)
+    wide = tuple(sweeps * h for h in halo)          # fetched halo per side
+    want = tuple(n + 2 * w for n, w in zip(out_shape, wide))
+    if window.shape != want:
+        raise ValueError(
+            f"window shape {window.shape} != out_shape + 2*sweeps*halo "
+            f"{want}")
+
+    pads = tuple(-n % t for n, t in zip(out_shape, tile))
+    xp = jnp.pad(window, [(0, p) for p in pads])
+    grid_dims = tuple((n + p) // t for n, p, t in zip(out_shape, pads, tile))
+    padded = tuple(n + p for n, p in zip(out_shape, pads))
+    org = jnp.asarray(origin, jnp.int32)
+
+    kernel = functools.partial(
+        _kernel, taps=tuple(spec.taps), halo=halo, tile=tile, sweeps=sweeps,
+        grid_shape=grid_shape, acc_dtype=_acc_dtype(window.dtype))
+
+    def in_map(*ids):
+        return tuple(i * t for i, t in zip(ids, tile))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid_dims,
+        in_specs=[element_blockspec(
+            tuple(t + 2 * w for t, w in zip(tile, wide)), in_map),
+            pl.BlockSpec((spec.ndim,), lambda *ids: (0,))],
+        out_specs=pl.BlockSpec(tile, lambda *ids: ids),
+        out_shape=jax.ShapeDtypeStruct(padded, window.dtype),
+        interpret=interpret,
+    )(xp, org)
+    return out[tuple(slice(0, n) for n in out_shape)]
 
 
 def stencil_sweep(spec: StencilSpec, grid: jax.Array,
@@ -128,39 +178,11 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
         raise ValueError(f"grid rank {grid.ndim} != spec ndim {spec.ndim}")
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
-    if tile is None:
-        tile = DEFAULT_TILES[spec.ndim]
-    elif isinstance(tile, int):
-        tile = (tile,)
-    tile = tuple(int(t) for t in tile)
-    if len(tile) != spec.ndim:
-        raise ValueError(f"tile rank {len(tile)} != spec ndim {spec.ndim}")
-
-    halo = spec.halo
-    shape = grid.shape
-    wide = tuple(sweeps * h for h in halo)          # fetched halo per side
-    pads = tuple(-n % t for n, t in zip(shape, tile))
-    xp = jnp.pad(grid, [(w, w + p) for w, p in zip(wide, pads)])
-    grid_dims = tuple((n + p) // t for n, p, t in zip(shape, pads, tile))
-    padded = tuple(n + p for n, p in zip(shape, pads))
-
-    kernel = functools.partial(
-        _kernel, taps=tuple(spec.taps), halo=halo, tile=tile, sweeps=sweeps,
-        grid_shape=shape, acc_dtype=_acc_dtype(grid.dtype))
-
-    def in_map(*ids):
-        return tuple(i * t for i, t in zip(ids, tile))
-
-    out = pl.pallas_call(
-        kernel,
-        grid=grid_dims,
-        in_specs=[element_blockspec(
-            tuple(t + 2 * w for t, w in zip(tile, wide)), in_map)],
-        out_specs=pl.BlockSpec(tile, lambda *ids: ids),
-        out_shape=jax.ShapeDtypeStruct(padded, grid.dtype),
-        interpret=interpret,
-    )(xp)
-    return out[tuple(slice(0, n) for n in shape)]
+    wide = tuple(sweeps * h for h in spec.halo)
+    window = jnp.pad(grid, [(w, w) for w in wide])
+    return stencil_window_sweep(
+        spec, window, grid.shape, (0,) * spec.ndim, grid.shape,
+        tile=tile, sweeps=sweeps, interpret=interpret)
 
 
 def stencil_apply(spec: StencilSpec, grid: jax.Array,

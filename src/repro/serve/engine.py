@@ -27,19 +27,27 @@ class ServeEngine:
 
     def generate(self, batch: dict, n_tokens: int,
                  temperature: float = 0.0, key=None) -> jax.Array:
-        """Greedy/temperature sampling; returns (B, n_tokens) int32."""
+        """Greedy/temperature sampling; returns (B, n_tokens) int32.
+
+        The first token samples from the prefill logits; the remaining
+        ``n_tokens - 1`` come from exactly that many decode steps (no
+        trailing wasted decode).  The PRNG key is split *before* every
+        use, so no sample ever reuses a key another sample consumed.
+        """
+        if n_tokens < 1:
+            raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
         state, length, logits = self._prefill(self.params, batch)
         key = key if key is not None else jax.random.PRNGKey(0)
-        outs = []
-        tok = self._sample(logits[:, -1], temperature, key)
-        for i in range(n_tokens):
-            outs.append(tok)
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits[:, -1], temperature, sub)
+        outs = [tok]
+        for _ in range(n_tokens - 1):
             state, length, logits = self._decode(self.params, state, length,
                                                  tok)
             key, sub = jax.random.split(key)
             tok = self._sample(logits[:, -1], temperature, sub)
-        return jnp.concatenate(outs, axis=-1).reshape(
-            -1, n_tokens)
+            outs.append(tok)
+        return jnp.concatenate(outs, axis=-1)
 
     @staticmethod
     def _sample(logits: jax.Array, temperature: float, key) -> jax.Array:

@@ -159,6 +159,23 @@ def test_casper_engine_pallas_sweeps(sweeps, rng):
             np.asarray(unfused.run(g, iters=iters)), atol=1e-4)
 
 
+def test_engine_frozen_after_init(rng):
+    """run() caches a jitted loop closing over sweeps/backend/tile, so
+    post-init mutation must raise instead of silently running stale
+    fused blocks."""
+    from repro.core import jacobi2d
+    eng = CasperEngine(jacobi2d(), backend="pallas", sweeps=2, tile="auto")
+    g = jnp.asarray(rng.standard_normal((32, 40)), jnp.float32)
+    eng.run(g, iters=3)
+    for attr, val in (("sweeps", 4), ("backend", "ref"), ("tile", None)):
+        with pytest.raises(AttributeError):
+            setattr(eng, attr, val)
+    # still usable after the rejected mutations, with the init options
+    np.testing.assert_allclose(
+        np.asarray(eng.run(g, iters=3)),
+        np.asarray(_chained(PAPER_STENCILS["jacobi2d"], g, 3)), atol=1e-5)
+
+
 def test_compat_shims_match_engine(rng):
     from repro import kernels
     spec1 = PAPER_STENCILS["7pt1d"]

@@ -1,0 +1,102 @@
+"""ServeEngine decode-loop and PRNG-threading regressions.
+
+Two historical bugs are pinned here: the prefill-step sample used to
+consume the caller's key and then ``split`` that same already-used key
+(correlating the prefill sample with the first decode sample at
+``temperature > 0``), and the decode loop used to run ``n_tokens`` jitted
+decode steps while discarding the last one's sample — one wasted decode
+(and donated-cache churn) per call.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import make_arch
+from repro.models.common import init_params
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("qwen3-14b", reduced=True)
+    arch = make_arch(cfg)
+    params = init_params(jax.random.PRNGKey(0), arch.param_specs(cfg))
+    eng = ServeEngine(arch, params, max_len=48)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab,
+                                 dtype=jnp.int32)
+    return eng, {"tokens": prompts}
+
+
+def _count_decodes(eng, batch, n_tokens, **kw):
+    calls = {"n": 0}
+    orig = eng._decode
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    eng._decode = counting
+    try:
+        toks = eng.generate(batch, n_tokens=n_tokens, **kw)
+    finally:
+        eng._decode = orig
+    return toks, calls["n"]
+
+
+@pytest.mark.parametrize("n_tokens", [1, 4])
+def test_exactly_n_minus_1_decode_calls(engine, n_tokens):
+    """n_tokens tokens = 1 prefill sample + (n_tokens - 1) decode steps."""
+    eng, batch = engine
+    toks, n_calls = _count_decodes(eng, batch, n_tokens)
+    assert toks.shape == (2, n_tokens)
+    assert n_calls == n_tokens - 1
+
+
+def test_n_tokens_must_be_positive(engine):
+    eng, batch = engine
+    with pytest.raises(ValueError):
+        eng.generate(batch, n_tokens=0)
+
+
+def test_every_sample_uses_a_fresh_subkey(engine):
+    """No sample may see the caller's key or a key another sample used."""
+    eng, batch = engine
+    user_key = jax.random.PRNGKey(7)
+    seen = []
+    orig = ServeEngine._sample
+
+    def recording(logits, temperature, key):
+        seen.append(tuple(np.asarray(key).tolist()))
+        return orig(logits, temperature, key)
+
+    eng._sample = recording
+    try:
+        eng.generate(batch, n_tokens=4, temperature=1.0, key=user_key)
+    finally:
+        del eng._sample
+    assert len(seen) == 4                      # prefill + 3 decode samples
+    assert len(set(seen)) == 4                 # all distinct
+    assert tuple(np.asarray(user_key).tolist()) not in seen
+
+
+def test_generate_deterministic_given_key(engine):
+    eng, batch = engine
+    k = jax.random.PRNGKey(3)
+    a = eng.generate(batch, n_tokens=8, temperature=1.0, key=k)
+    b = eng.generate(batch, n_tokens=8, temperature=1.0, key=k)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = eng.generate(batch, n_tokens=8, temperature=1.0,
+                     key=jax.random.PRNGKey(4))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_greedy_prefix_consistency(engine):
+    """A shorter greedy generation is a prefix of a longer one — the
+    restructured loop must thread token/logits pairs without off-by-one."""
+    eng, batch = engine
+    short = eng.generate(batch, n_tokens=3)
+    long = eng.generate(batch, n_tokens=6)
+    np.testing.assert_array_equal(np.asarray(short),
+                                  np.asarray(long[:, :3]))
