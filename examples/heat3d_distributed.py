@@ -2,8 +2,11 @@
 
 The cluster-scale version of Casper's stencil segment (DESIGN.md §2): each
 device owns a contiguous block of the grid; only halo surfaces move over the
-interconnect (`collective_permute`).  Runs on 8 forced host devices so it
-works on any CPU box:
+interconnect (`collective_permute`).  Also demonstrates the boundary
+subsystem: the same engine runs the physically meaningful *reflecting wall*
+(``boundary="reflect"`` — an insulated box that conserves heat) next to the
+open zero-boundary domain.  Runs on 8 forced host devices so it works on
+any CPU box:
 
     PYTHONPATH=src python examples/heat3d_distributed.py
 """
@@ -62,6 +65,31 @@ def main():
     assert launches["unfused"] >= 3.0 * launches["fused t=4"]
     print(f"launch reduction: "
           f"{launches['unfused'] / launches['fused t=4']:.1f}x")
+
+    # reflecting walls: the same fused distributed engine with
+    # boundary="reflect" models an insulated box — mirrored ghosts instead
+    # of a cold (zero) exterior, so heat stays in instead of leaking out.
+    hot = jnp.asarray(rng.random(shape) + 0.5, jnp.float32)   # positive field
+    hot = jax.device_put(hot, sharding)
+    total0 = float(jnp.sum(hot))
+    walls = {}
+    for boundary in ("reflect", "zero"):
+        spec_b = spec.with_boundary(boundary)
+        eng_b = CasperEngine(spec_b, sweeps=4)
+        out_b = eng_b.distributed_fn(mesh, ("sx", "sy", None),
+                                     iters=iters)(hot)
+        want_b = run_iterations(spec_b, jnp.asarray(np.asarray(hot)), iters)
+        err_b = float(jnp.max(jnp.abs(out_b - want_b)))
+        assert err_b < 1e-4, (boundary, err_b)
+        walls[boundary] = float(jnp.sum(out_b))
+        print(f"boundary={boundary:8s}: max err {err_b:.2e}, "
+              f"total heat {walls[boundary]:.1f} (t=0: {total0:.1f})")
+    # the insulated box holds its heat; the open boundary bleeds it out
+    assert abs(walls["reflect"] - total0) / total0 < 0.02
+    assert (total0 - walls["zero"]) / total0 > 0.05
+    print(f"reflecting walls keep "
+          f"{100 * walls['reflect'] / total0:.1f}% of the heat; "
+          f"open (zero) walls keep {100 * walls['zero'] / total0:.1f}%")
     print("ok")
 
 

@@ -1,8 +1,9 @@
 """Casper core: the paper's contribution as composable JAX modules."""
 from .stencil import (StencilSpec, PAPER_STENCILS, DOMAIN_SIZES, jacobi1d,
                       jacobi2d, seven_point_1d, blur2d, heat3d, star33_3d,
-                      domain_for)
-from .ref import apply_stencil, run_iterations
+                      advect1d, advect2d, domain_for, parse_boundary,
+                      BOUNDARY_MODES)
+from .ref import apply_stencil, run_iterations, pad_boundary
 from .streams import plan_streams, StreamPlan
 from .isa import assemble, decode, Instr, Program
 from .vm import SpuVM, run_program
@@ -12,8 +13,10 @@ from .engine import CasperEngine
 
 __all__ = [
     "StencilSpec", "PAPER_STENCILS", "DOMAIN_SIZES", "jacobi1d", "jacobi2d",
-    "seven_point_1d", "blur2d", "heat3d", "star33_3d", "domain_for",
-    "apply_stencil", "run_iterations", "plan_streams", "StreamPlan",
+    "seven_point_1d", "blur2d", "heat3d", "star33_3d", "advect1d",
+    "advect2d", "domain_for", "parse_boundary", "BOUNDARY_MODES",
+    "apply_stencil", "run_iterations", "pad_boundary", "plan_streams",
+    "StreamPlan",
     "assemble", "decode", "Instr", "Program", "SpuVM", "run_program",
     "SegmentConfig", "access_counts", "remote_fraction",
     "distributed_stencil_fn", "exchange_halo_1axis", "CasperEngine",

@@ -13,6 +13,14 @@ sweep), and ``run(grid, iters)`` decomposes ``iters`` into fused blocks
 plus an exact remainder.  ``tile="auto"`` picks the block shape with the
 :mod:`repro.kernels.tune` autotuner the first time a grid shape is seen.
 
+Boundary handling rides on the spec: construct the engine with e.g.
+``CasperEngine(jacobi2d().with_boundary("periodic"))`` and every path —
+``run``, ``step``, ``distributed_fn`` — serves edge taps per that mode
+(zero / constant(c) / periodic / reflect), f64 bit-identically to the
+oracle.  The engine is frozen after ``__init__`` (mutating ``sweeps``/
+``backend``/``tile``/... raises); build a new engine to change options,
+including the boundary.
+
 The assembled Casper program (ISA) is available as ``engine.program`` and
 is what `initStencilcode` would broadcast to the SPUs.
 """

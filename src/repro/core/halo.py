@@ -16,11 +16,22 @@ device-shard granularity.  When a neighbor's block is narrower than the
 deep halo, the exchange falls back to a multi-hop gather (``ppermute`` at
 distances 1..k), so slivers and tiny shards stay correct.
 
-Zero (non-periodic) boundaries fall out of `ppermute` semantics for free:
-devices without a source in the permutation receive zeros.  Between fused
-sweeps, the shard-local compute re-zeros intermediates that fall outside
-the *global* grid (`ref.masked_window_sweeps`), matching the oracle's
-re-pad-with-zeros-every-sweep semantics exactly.
+Boundary modes (``spec.boundary``) shape the exchange at the grid edges:
+
+* ``zero`` falls out of `ppermute` semantics for free — devices without a
+  source in the permutation receive zeros;
+* ``periodic`` turns each hop into a wrap-around *ring* permutation
+  (``(i, (i+j) mod n)`` for every device), so grid-edge devices receive
+  the opposite edge of the grid instead of fill;
+* ``constant(c)`` / ``reflect`` keep the zero-filled exchange and then fix
+  the out-of-grid ghost region up locally — a constant fill, or a mirror
+  gather whose source provably lies inside the already-exchanged block.
+
+Between fused sweeps, the shard-local compute restores intermediates that
+fall outside the *global* grid to the mode's boundary extension
+(`ref.masked_window_sweeps`), matching the oracle's re-pad-every-sweep
+semantics exactly — f64 bit-identically for all four modes (see
+docs/boundaries.md).
 """
 from __future__ import annotations
 
@@ -38,18 +49,32 @@ from .stencil import StencilSpec
 
 
 def exchange_halo_1axis(x: jax.Array, axis: int, halo: int,
-                        axis_name: str) -> jax.Array:
+                        axis_name: str, *, mode: str = "zero",
+                        value: float = 0.0) -> jax.Array:
     """Pad dim ``axis`` of the local block with ``halo`` neighbor elements
-    per side.
+    per side, serving grid edges per the boundary ``mode``.
 
     Sends this block's right edge to the right neighbor (it becomes that
     neighbor's left halo) and vice versa.  ``halo`` may exceed the local
     block extent: the exchange then gathers from neighbors up to
     ``ceil(halo/size)`` hops away — one ``ppermute`` per hop per
     direction, the multi-hop fallback for deep halos on narrow shards.
-    Boundary devices receive zeros (devices without a source in a
-    permutation receive zeros, which is exactly the grid's zero-boundary
-    condition).
+
+    Grid edges per mode:
+
+    * ``zero`` — boundary devices receive zeros (devices without a source
+      in a permutation receive zeros: the zero boundary for free);
+    * ``periodic`` — each hop becomes a wrap-around ring permutation
+      ``(i, (i+j) mod n)``, so the assembled halo is exactly the wrap
+      (``numpy mode="wrap"``) extension of the global grid, at any depth
+      (a hop distance ≥ n simply wraps more than once);
+    * ``constant`` — zero-filled exchange, then out-of-grid coordinates
+      are overwritten with ``value``;
+    * ``reflect`` — zero-filled exchange, then out-of-grid coordinates
+      are overwritten by a mirror gather: the fold of a ghost coordinate
+      always lands inside this device's already-exchanged block (see
+      docs/boundaries.md for the in-window argument), so no extra
+      communication is needed.
     """
     if halo == 0:
         return x
@@ -63,6 +88,14 @@ def exchange_halo_1axis(x: jax.Array, axis: int, halo: int,
         w = min(size, halo - (j - 1) * size)
         right_edge = lax.slice_in_dim(x, size - w, size, axis=axis)
         left_edge = lax.slice_in_dim(x, 0, w, axis=axis)
+        if mode == "periodic":          # wrap-around ring, every device
+            from_left.append(lax.ppermute(
+                right_edge, axis_name,
+                [(i, (i + j) % n) for i in range(n)]))
+            from_right.append(lax.ppermute(
+                left_edge, axis_name,
+                [(i, (i - j) % n) for i in range(n)]))
+            continue
         if j >= n:                      # no neighbor that far: grid edge
             from_left.append(jnp.zeros_like(right_edge))
             from_right.append(jnp.zeros_like(left_edge))
@@ -72,29 +105,54 @@ def exchange_halo_1axis(x: jax.Array, axis: int, halo: int,
         from_right.append(lax.ppermute(
             left_edge, axis_name, [(i, i - j) for i in range(j, n)]))
     # left halo runs farthest-to-nearest neighbor, right halo the reverse.
-    return jnp.concatenate(from_left[::-1] + [x] + from_right, axis=axis)
+    out = jnp.concatenate(from_left[::-1] + [x] + from_right, axis=axis)
+    if mode in ("constant", "reflect"):
+        out = _fix_edge_ghosts_1axis(out, axis, halo, size, axis_name, n,
+                                     mode, value)
+    return out
+
+
+def _fix_edge_ghosts_1axis(padded: jax.Array, axis: int, halo: int,
+                           size: int, axis_name: str, n,
+                           mode: str, value: float) -> jax.Array:
+    """Overwrite out-of-grid coordinates of an exchanged block along
+    ``axis`` with the ``constant`` fill or the ``reflect`` mirror of the
+    block's own (already exchanged, hence globally correct) data."""
+    start = lax.axis_index(axis_name) * size
+    grid_n = n * size
+    ext = padded.shape[axis]
+    if mode == "constant":
+        g = start - halo + jnp.arange(ext, dtype=jnp.int32)  # global coords
+        shape = [1] * padded.ndim
+        shape[axis] = ext
+        inside = ((g >= 0) & (g < grid_n)).reshape(shape)
+        return jnp.where(inside, padded,
+                         jnp.asarray(value, padded.dtype))
+    return _ref.reflect_gather(padded, axis, start - halo, grid_n, ext)
 
 
 def _local_multisweep(spec: StencilSpec, sharded_axes: Sequence[str | None],
                       sweeps: int, backend: str,
                       tile, interpret: bool, x: jax.Array) -> jax.Array:
     """Shard-local fused compute: widen the block by ``sweeps*halo`` once
-    (exchange on sharded dims, zero-pad elsewhere), then apply all
+    (exchange on sharded dims, boundary-pad elsewhere), then apply all
     ``sweeps`` stencil applications on the widened block."""
     halo = spec.halo
+    mode, value = spec.boundary_mode, spec.boundary_value
     deep = tuple(sweeps * h for h in halo)
     padded = x
     origin, grid_shape = [], []
     for d in range(spec.ndim):
         name = sharded_axes[d] if d < len(sharded_axes) else None
         if name is not None:
-            padded = exchange_halo_1axis(padded, d, deep[d], name)
+            padded = exchange_halo_1axis(padded, d, deep[d], name,
+                                         mode=mode, value=value)
             origin.append(lax.axis_index(name) * x.shape[d])
             grid_shape.append(x.shape[d] * lax.psum(1, name))
         else:
-            pad = [(0, 0)] * spec.ndim
-            pad[d] = (deep[d], deep[d])
-            padded = jnp.pad(padded, pad)
+            pad = [0] * spec.ndim
+            pad[d] = deep[d]
+            padded = _ref.pad_boundary(padded, pad, mode, value)
             origin.append(0)
             grid_shape.append(x.shape[d])
     if backend == "pallas":
@@ -110,7 +168,7 @@ def _local_multisweep(spec: StencilSpec, sharded_axes: Sequence[str | None],
         raise ValueError(f"unknown backend {backend!r}")
     return _ref.masked_window_sweeps(
         padded, spec.taps, halo, x.shape, sweeps, origin, grid_shape,
-        x.dtype).astype(x.dtype)
+        x.dtype, mode=mode, value=value).astype(x.dtype)
 
 
 def distributed_stencil_fn(

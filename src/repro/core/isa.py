@@ -78,11 +78,22 @@ def decode(word: int) -> Instr:
 
 @dataclasses.dataclass(frozen=True)
 class Program:
-    """An assembled Casper program: instructions + stream/constant tables."""
+    """An assembled Casper program: instructions + stream/constant tables.
+
+    ``boundary`` (recorded on the stream plan) is the source spec's
+    boundary mode — instruction semantics are boundary-free (streams
+    serve whatever the runtime maps under them), but the software SPU VM
+    needs it to serve out-of-grid stream elements the same way the
+    oracles do.
+    """
 
     spec_name: str
     plan: StreamPlan
     instrs: tuple[Instr, ...]
+
+    @property
+    def boundary(self) -> str:
+        return self.plan.boundary
 
     @property
     def words(self) -> tuple[int, ...]:

@@ -232,6 +232,12 @@ def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
     intermediate application at its shrinking window size, padded up to
     the VPU (sublane, lane) grain so misaligned tiles pay for the lanes
     they waste.
+
+    The boundary mode enters through ``spec.boundary``: traffic is
+    mode-independent (the window is fetched whole either way), but
+    ``reflect`` adds one per-axis ghost-re-mirroring gather pass over
+    every intermediate window between fused sweeps (the other modes'
+    fix-up is a masked select already folded into the tap accounting).
     """
     halo = spec.halo
     n_tiles = math.prod(-(-n // t) for n, t in zip(shape, tile))
@@ -255,6 +261,10 @@ def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
 
     flops = sum(padded_points(sweeps - 1 - s) * spec.flops_per_point()
                 for s in range(sweeps)) * n_tiles
+    if spec.boundary_mode == "reflect":
+        # one elementwise gather pass per axis per intermediate window
+        flops += sum(padded_points(sweeps - 1 - s) * len(tile)
+                     for s in range(sweeps - 1)) * n_tiles
     t_compute = flops / TPU_VPU_FLOPS_F32
     return max(t_mem, t_compute) + n_tiles * TPU_GRID_STEP_S
 

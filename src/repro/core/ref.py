@@ -2,6 +2,14 @@
 
 This is the ground truth against which the ISA VM, the Pallas kernels, and
 the distributed halo-exchange step are all validated.
+
+Boundary handling: every oracle honors ``spec.boundary`` — the per-sweep
+semantics are "extend the grid by the boundary rule, apply the taps, keep
+the interior" for each of the four modes (zero / constant(c) / periodic /
+reflect; see the mode table in :mod:`repro.core.stencil`).
+:func:`pad_boundary` is the shared extension primitive and
+:func:`reflect_index` / :func:`periodic_index` the shared ghost→interior
+index maps reused by the Pallas engine and the distributed halo fix-up.
 """
 from __future__ import annotations
 
@@ -10,7 +18,73 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .stencil import StencilSpec
+from .stencil import StencilSpec, parse_boundary
+
+
+def periodic_index(idx, n: int):
+    """Wrap (possibly out-of-range) coordinates into ``[0, n)`` — the
+    ghost→interior map of ``boundary="periodic"`` (numpy ``mode="wrap"``).
+    Works on numpy arrays, jnp arrays and traced values alike."""
+    return idx % n
+
+
+def reflect_index(idx, n: int):
+    """Fold (possibly out-of-range) coordinates into ``[0, n)`` by mirror
+    reflection about the edge *elements* — the ghost→interior map of
+    ``boundary="reflect"`` (numpy ``mode="reflect"``: period ``2n-2``, edge
+    not repeated; a size-1 axis degenerates to index 0).  Works on numpy
+    arrays, jnp arrays and traced values alike."""
+    if n == 1:
+        return idx * 0
+    period = 2 * n - 2
+    m = idx % period
+    xp = jnp if isinstance(idx, jax.Array) else np
+    return xp.where(m < n, m, period - m)
+
+
+def reflect_gather(x, axis: int, g0, n: int, ext: int):
+    """Overwrite ghosts along ``axis`` with their mirror source.
+
+    ``x``'s extent ``ext`` along ``axis`` spans global coordinates
+    ``[g0, g0+ext)`` of an ``n``-point grid axis; every element is
+    replaced by the one at the fold of its own coordinate (identity for
+    in-grid elements).  True ghost mirrors always land inside the array
+    — the clip only guards positions holding unconsumed alignment
+    garbage.  Shared by the fused-sweep ghost restoration and the
+    distributed edge fix-up.
+    """
+    g = g0 + jnp.arange(ext, dtype=jnp.int32)
+    src = reflect_index(g, n) - g0
+    return jnp.take(x, jnp.clip(src, 0, ext - 1), axis=axis)
+
+
+def _pad_with(pad_fn, grid, widths, mode, value):
+    pad = [(int(w), int(w)) for w in widths]
+    if mode == "zero":
+        return pad_fn(grid, pad)
+    if mode == "constant":
+        return pad_fn(grid, pad, constant_values=value)
+    if mode == "periodic":
+        return pad_fn(grid, pad, mode="wrap")
+    if mode == "reflect":
+        return pad_fn(grid, pad, mode="reflect")
+    raise ValueError(f"unknown boundary mode {mode!r}")
+
+
+def pad_boundary(grid: jax.Array, widths, mode: str = "zero",
+                 value: float = 0.0) -> jax.Array:
+    """Extend ``grid`` by ``widths[d]`` ghost layers per side of dim ``d``
+    according to the boundary ``mode``.
+
+    The ghost values are *bitwise copies* of interior elements for
+    ``periodic``/``reflect`` (arbitrarily deep: wrap repeats, reflect
+    folds with period ``2n-2``), and the literal fill for
+    ``zero``/``constant`` — so any implementation that builds its halo
+    through this helper agrees bit-for-bit with any other.
+    """
+    if mode == "constant":
+        value = jnp.asarray(value, grid.dtype)
+    return _pad_with(jnp.pad, grid, widths, mode, value)
 
 
 def tap_sum(windows, coeffs, dtype) -> jax.Array:
@@ -44,21 +118,37 @@ def tap_sum(windows, coeffs, dtype) -> jax.Array:
 
 def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
                          sweeps: int, starts, grid_shape,
-                         acc_dtype) -> jax.Array:
+                         acc_dtype, *, mode: str = "zero",
+                         value: float = 0.0) -> jax.Array:
     """Apply ``sweeps`` fused stencil applications to one widened window.
 
     ``window`` carries ``sweeps`` halo layers per side around an
     ``out_shape`` interior whose origin sits at global coordinate
     ``starts`` of a ``grid_shape`` grid; application ``s`` consumes one
     layer, so the intermediate after it has ``sweeps-1-s`` layers left
-    and the final result is exactly ``out_shape``.
+    and the final result is exactly ``out_shape``.  The caller must have
+    filled the window's ghost layers with the boundary extension for
+    ``mode`` (see :func:`pad_boundary` / the distributed halo exchange).
 
-    Between applications, elements whose *global* coordinate falls
-    outside the true grid are masked back to zero — the closed form of
-    the oracle re-padding with zeros before every sweep — which also
-    kills values leaking in from any out-of-grid padding around the
-    window.  Accumulation routes through :func:`tap_sum`, so f64 results
-    stay bit-identical to chained :func:`apply_stencil` calls.
+    Between applications, ghost elements — those whose *global*
+    coordinate falls outside the true grid — are restored to the boundary
+    extension of the intermediate, the closed form of the oracle
+    re-padding before every sweep:
+
+    * ``zero`` / ``constant``: ghosts are overwritten with the fill value
+      (which also kills values leaking in from any out-of-grid padding
+      around the window);
+    * ``reflect``: ghosts are re-mirrored from the intermediate's interior
+      by a per-axis gather (the mirror source of a ghost ``rem·halo``
+      layers deep is provably inside the same window);
+    * ``periodic``: nothing — a stencil applied to a periodically
+      extended window yields ghost values that are bitwise equal to their
+      wrapped interior counterparts, so the ghosts evolve correctly on
+      their own.
+
+    Accumulation routes through :func:`tap_sum`, so f64 results stay
+    bit-identical to chained :func:`apply_stencil` calls under every
+    mode.
 
     This is the shared core of the Pallas kernel (``starts`` =
     ``program_id * tile``) and the distributed shard-local path
@@ -77,24 +167,35 @@ def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
              for off, _ in taps],
             coeffs, acc_dtype)
         if rem:
-            valid = None
-            for d in range(ndim):
-                g0 = starts[d] - rem * halo[d]
-                coords = g0 + jax.lax.broadcasted_iota(jnp.int32, cur, d)
-                vd = (coords >= 0) & (coords < grid_shape[d])
-                valid = vd if valid is None else valid & vd
-            acc = jnp.where(valid, acc, jnp.zeros_like(acc))
+            if mode in ("zero", "constant"):
+                valid = None
+                for d in range(ndim):
+                    g0 = starts[d] - rem * halo[d]
+                    coords = g0 + jax.lax.broadcasted_iota(jnp.int32, cur, d)
+                    vd = (coords >= 0) & (coords < grid_shape[d])
+                    valid = vd if valid is None else valid & vd
+                fill = jnp.asarray(value if mode == "constant" else 0.0,
+                                   acc.dtype)
+                acc = jnp.where(valid, acc, fill)
+            elif mode == "reflect":
+                for d in range(ndim):
+                    acc = reflect_gather(acc, d, starts[d] - rem * halo[d],
+                                         grid_shape[d], cur[d])
+            elif mode != "periodic":
+                raise ValueError(f"unknown boundary mode {mode!r}")
         x = acc
     return x
 
 
 def apply_stencil(spec: StencilSpec, grid: jax.Array) -> jax.Array:
-    """out[p] = sum_k c_k * in[p + off_k], zero boundary; one sweep."""
+    """``out[p] = sum_k c_k * in[p + off_k]``, one sweep; taps past the
+    edge are served by ``spec.boundary`` (zero / constant / periodic /
+    reflect)."""
     if grid.ndim != spec.ndim:
         raise ValueError(f"grid rank {grid.ndim} != spec ndim {spec.ndim}")
     halo = spec.halo
-    pad = [(h, h) for h in halo]
-    padded = jnp.pad(grid, pad)
+    padded = pad_boundary(grid, halo, spec.boundary_mode,
+                          spec.boundary_value)
     windows = [
         jax.lax.dynamic_slice(
             padded, tuple(h + o for h, o in zip(halo, off)), grid.shape)
@@ -113,10 +214,17 @@ def run_iterations(spec: StencilSpec, grid: jax.Array, iters: int) -> jax.Array:
     return final
 
 
+def pad_boundary_numpy(grid: np.ndarray, widths, mode: str = "zero",
+                       value: float = 0.0) -> np.ndarray:
+    """Numpy analogue of :func:`pad_boundary` (independent of jax)."""
+    return _pad_with(np.pad, grid, widths, mode, value)
+
+
 def apply_stencil_numpy(spec: StencilSpec, grid: np.ndarray) -> np.ndarray:
     """O(points x taps) loop-free numpy oracle (independent of jax)."""
     halo = spec.halo
-    padded = np.pad(grid, [(h, h) for h in halo])
+    padded = pad_boundary_numpy(grid, halo, spec.boundary_mode,
+                                spec.boundary_value)
     out = np.zeros_like(grid)
     for off, coeff in spec.taps:
         idx = tuple(
@@ -130,14 +238,27 @@ def apply_stencil_loops(spec: StencilSpec, grid: np.ndarray) -> np.ndarray:
     """Scalar triple-loop oracle (the paper's Fig. 2 pseudo-code), slow.
 
     Only used in tests on tiny grids to anchor the vectorized oracles.
+    Serves out-of-grid taps point by point from the spec's boundary mode
+    table, the most literal statement of the semantics.
     """
+    mode, value = parse_boundary(spec.boundary)
     out = np.zeros_like(grid)
     shape = grid.shape
     for p in np.ndindex(*shape):
         acc = 0.0
         for off, coeff in spec.taps:
             q = tuple(pi + oi for pi, oi in zip(p, off))
-            if all(0 <= qi < ni for qi, ni in zip(q, shape)):
+            inside = all(0 <= qi < ni for qi, ni in zip(q, shape))
+            if inside:
                 acc += coeff * grid[q]
+            elif mode == "constant":
+                acc += coeff * value
+            elif mode == "periodic":
+                acc += coeff * grid[tuple(periodic_index(qi, ni)
+                                          for qi, ni in zip(q, shape))]
+            elif mode == "reflect":
+                acc += coeff * grid[tuple(int(reflect_index(qi, ni))
+                                          for qi, ni in zip(q, shape))]
+            # zero: out-of-grid taps contribute nothing
         out[p] = acc
     return out

@@ -4,28 +4,74 @@ A stencil is a fixed pattern of (offset, coefficient) taps applied to every
 point of a regular grid.  All six kernels evaluated by the paper (§7.2) are
 Jacobi-style: disjoint read/write sets, one FP multiply-accumulate per tap.
 
-Boundary convention: zero padding (the paper computes interior points of a
-segment; zero-pad is the equivalent closed form and is used consistently by
-the reference oracle, the ISA VM, the Pallas kernels and the distributed
-halo-exchange step, so all implementations agree bit-for-bit in f64/f32).
+Boundary convention: each spec carries a ``boundary`` field selecting how
+taps reaching past the grid edge are served.  Every implementation layer
+(the reference oracles, the ISA VM, the Pallas engine and the distributed
+halo-exchange step) honors the same mode table, so all of them agree
+bit-for-bit in f64 under every mode:
+
+====================  =====================================================
+``boundary``          ghost value at out-of-grid coordinate ``g``
+====================  =====================================================
+``"zero"``            ``0`` (the paper's interior-segment closed form)
+``"constant(c)"``     the literal ``c`` (Dirichlet wall)
+``"periodic"``        ``grid[g mod N]`` per axis (wrap-around torus)
+``"reflect"``         ``grid[fold(g)]`` — mirrored about the edge *element*
+                      (numpy ``mode="reflect"``: period ``2N-2``, edge not
+                      repeated)
+====================  =====================================================
+
+See ``docs/boundaries.md`` for the per-mode closed forms used by fused
+temporal blocking and the distributed wrap-ring exchange.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import re
 from typing import Mapping, Sequence
 
 Offset = tuple[int, ...]
 Tap = tuple[Offset, float]
 
+#: The recognized boundary modes (``constant`` is spelled ``constant(c)``).
+BOUNDARY_MODES = ("zero", "constant", "periodic", "reflect")
+
+_CONSTANT_RE = re.compile(r"^constant\((?P<c>[^)]+)\)$")
+
+
+def parse_boundary(boundary: str) -> tuple[str, float]:
+    """``"zero" | "constant(c)" | "periodic" | "reflect"`` → ``(mode, value)``.
+
+    ``value`` is the Dirichlet fill for ``constant`` and ``0.0`` otherwise.
+    Raises ``ValueError`` on an unrecognized spelling.
+    """
+    if boundary in ("zero", "periodic", "reflect"):
+        return boundary, 0.0
+    m = _CONSTANT_RE.match(boundary)
+    if m is not None:
+        try:
+            return "constant", float(m.group("c"))
+        except ValueError:
+            pass
+    raise ValueError(
+        f"unknown boundary {boundary!r}; expected 'zero', 'constant(c)', "
+        "'periodic' or 'reflect'")
+
 
 @dataclasses.dataclass(frozen=True)
 class StencilSpec:
-    """A fixed stencil pattern: ``out[p] = sum_k coeff_k * in[p + off_k]``."""
+    """A fixed stencil pattern: ``out[p] = sum_k coeff_k * in[p + off_k]``.
+
+    ``boundary`` selects how taps past the grid edge are served (see the
+    module docstring mode table); the default ``"zero"`` preserves the
+    seed's zero-padding convention.
+    """
 
     name: str
     ndim: int
     taps: tuple[Tap, ...]
+    boundary: str = "zero"
 
     def __post_init__(self):
         if self.ndim < 1 or self.ndim > 3:
@@ -37,10 +83,25 @@ class StencilSpec:
             if off in seen:
                 raise ValueError(f"duplicate tap offset {off}")
             seen.add(off)
+        parse_boundary(self.boundary)   # raises on unknown spelling
 
     @property
     def n_taps(self) -> int:
         return len(self.taps)
+
+    @property
+    def boundary_mode(self) -> str:
+        """One of :data:`BOUNDARY_MODES` (``constant(c)`` → ``constant``)."""
+        return parse_boundary(self.boundary)[0]
+
+    @property
+    def boundary_value(self) -> float:
+        """The Dirichlet fill ``c`` for ``constant(c)``; ``0.0`` otherwise."""
+        return parse_boundary(self.boundary)[1]
+
+    def with_boundary(self, boundary: str) -> "StencilSpec":
+        """Same taps under a different boundary mode (validated)."""
+        return dataclasses.replace(self, boundary=boundary)
 
     @property
     def halo(self) -> tuple[int, ...]:
@@ -140,6 +201,28 @@ def star33_3d() -> StencilSpec:
     total = sum(c for _, c in taps)
     taps = [(o, c / total) for o, c in taps]
     return StencilSpec("star33_3d", 3, tuple(taps))
+
+
+def advect1d(courant: float = 0.3) -> StencilSpec:
+    """First-order upwind advection on a periodic ring.
+
+    ``out[i] = (1-c)·a[i] + c·a[i-1]`` with Courant number ``c``: the
+    canonical periodic-domain workload (mass-conserving — the coefficients
+    sum to 1, so under ``boundary="periodic"`` the grid total is exactly
+    preserved every sweep).
+    """
+    c = float(courant)
+    return StencilSpec("advect1d", 1, (((0,), 1.0 - c), ((-1,), c)),
+                       boundary="periodic")
+
+
+def advect2d(cy: float = 0.2, cx: float = 0.3) -> StencilSpec:
+    """Dimensionally-split upwind advection on a periodic 2-D torus."""
+    cy, cx = float(cy), float(cx)
+    return StencilSpec(
+        "advect2d", 2,
+        (((0, 0), 1.0 - cy - cx), ((-1, 0), cy), ((0, -1), cx)),
+        boundary="periodic")
 
 
 PAPER_STENCILS: Mapping[str, StencilSpec] = {

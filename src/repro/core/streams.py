@@ -10,6 +10,13 @@ innermost-dim *shift* encoded in the instruction (paper §5.1, 1b direction +
 Taps whose innermost offset exceeds the shift range get a dedicated stream —
 same rule the paper's library would apply for very wide stencils (footnote 3:
 complex stencils have 30-40 points; stream ids are 4 bits).
+
+Streams are boundary-agnostic: a stream's base may point before the first or
+past the last grid element, and whichever runtime executes the plan (the
+software SPU VM here) serves those out-of-grid elements per the spec's
+boundary mode table (zero / constant(c) / periodic / reflect — see
+:mod:`repro.core.stencil`).  The plan records the mode in ``boundary`` so
+an assembled program is self-describing.
 """
 from __future__ import annotations
 
@@ -46,6 +53,7 @@ class StreamPlan:
     streams: tuple[Stream, ...]          # input streams (indices 1..N)
     taps: tuple[PlannedTap, ...]         # in execution order
     consts: tuple[float, ...]            # constant buffer contents
+    boundary: str = "zero"               # how out-of-grid elements are served
 
     @property
     def n_input_streams(self) -> int:
@@ -106,4 +114,5 @@ def plan_streams(spec: StencilSpec) -> StreamPlan:
         streams=tuple(streams),
         taps=tuple(taps),
         consts=tuple(consts),
+        boundary=spec.boundary,
     )

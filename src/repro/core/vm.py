@@ -5,6 +5,12 @@ VM executes instruction-by-instruction *vectorized over all grid points at
 once* — semantically identical to the per-point sequential SPU, and it lets
 us validate the ISA against the jnp oracle on full-size grids.
 
+Out-of-grid stream elements are served per the program's boundary mode
+(zero / constant(c) / periodic / reflect — the mode table of
+:mod:`repro.core.stencil`): the runtime maps ghost addresses to the fill
+value or to the wrapped/mirrored interior element, exactly like the
+oracles, so VM-vs-oracle parity holds under every mode.
+
 The VM also keeps the event counters (loads by alignment, stores, MACs,
 instructions) that feed the performance/energy model (`perfmodel.py`).
 """
@@ -15,7 +21,8 @@ import dataclasses
 import numpy as np
 
 from .isa import Program, assemble
-from .stencil import StencilSpec
+from .ref import periodic_index, reflect_index
+from .stencil import StencilSpec, parse_boundary
 
 
 @dataclasses.dataclass
@@ -30,9 +37,17 @@ class SpuCounters:
         return dataclasses.asdict(self)
 
 
-def _shifted(grid: np.ndarray, offset: tuple[int, ...]) -> np.ndarray:
-    """Zero-padded shifted view: value of in[p + offset] for all p."""
-    out = np.zeros_like(grid)
+def _shifted(grid: np.ndarray, offset: tuple[int, ...],
+             mode: str = "zero", value: float = 0.0) -> np.ndarray:
+    """Boundary-extended shifted view: value of in[p + offset] for all p,
+    with out-of-grid elements served per the boundary ``mode``."""
+    if mode in ("periodic", "reflect"):
+        fold = periodic_index if mode == "periodic" else reflect_index
+        idx = tuple(np.asarray(fold(np.arange(n) + o, n))
+                    for o, n in zip(offset, grid.shape))
+        return grid[np.ix_(*idx)]
+    fill = value if mode == "constant" else 0.0
+    out = np.full_like(grid, fill)
     src = []
     dst = []
     for o, n in zip(offset, grid.shape):
@@ -59,6 +74,7 @@ class SpuVM:
     def run(self, grid: np.ndarray) -> np.ndarray:
         prog = self.program
         plan = prog.plan
+        mode, fill = parse_boundary(prog.boundary)
         stream_base = {s.index: s.base for s in plan.streams}
         acc = np.zeros_like(grid)
         out = np.zeros_like(grid)
@@ -67,7 +83,7 @@ class SpuVM:
         for instr in prog.instrs:
             base = stream_base[instr.stream]
             offset = base[:-1] + (base[-1] + instr.shift,)
-            value = _shifted(grid, offset)
+            value = _shifted(grid, offset, mode, fill)
             coeff = plan.consts[instr.const]
             if instr.clear_acc:
                 acc = coeff * value

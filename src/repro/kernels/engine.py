@@ -24,10 +24,17 @@ parameterized by
   stencils.  This is the cache-aware time tiling of Frumkin & Van der
   Wijngaart applied at VMEM granularity.
 
-Zero-boundary semantics are preserved across fused sweeps: between inner
-applications, window elements whose global coordinate falls outside the
-true grid are masked back to zero (the reference oracle re-pads with
-zeros every sweep; the mask is the closed form of that re-pad).
+Boundary semantics (``spec.boundary``: zero / constant(c) / periodic /
+reflect) are preserved across fused sweeps: the fetched window is built
+with the mode's ghost extension (``ref.pad_boundary``), and between inner
+applications ghost elements — identified by *global* coordinate — are
+restored to the boundary extension of the intermediate: masked to the
+fill value (zero/constant), re-mirrored from the interior by an in-window
+gather (reflect), or left alone (periodic: the stencil of a periodically
+extended window keeps its ghosts bitwise equal to their wrapped interior
+counterparts).  Each is the closed form of the oracle re-padding before
+every sweep, so fused results stay f64 bit-identical to chained oracle
+applications under all four modes — see docs/boundaries.md.
 
 A leading batch dimension is handled by `vmap` (see
 :func:`stencil_apply`), so a stack of independent grids shares one
@@ -78,26 +85,27 @@ def _acc_dtype(dtype) -> jnp.dtype:
 
 
 def _kernel(x_ref, org_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
-            acc_dtype):
+            acc_dtype, mode, value):
     """Apply ``sweeps`` fused stencil applications to one resident window.
 
     The window enters with ``sweeps`` halo layers per side; the masked
     multi-sweep core (:func:`repro.core.ref.masked_window_sweeps`)
-    consumes one layer per application and re-zeros intermediates that
-    fall outside the true grid (which also kills values leaking in from
-    the tile-alignment pad).  ``org_ref`` holds the global coordinate of
+    consumes one layer per application and restores intermediates that
+    fall outside the true grid to the boundary extension for ``mode``
+    (which, for the fill modes, also kills values leaking in from the
+    tile-alignment pad).  ``org_ref`` holds the global coordinate of
     the whole window-call's interior origin — zeros for a single-device
-    grid, the shard offset in the distributed path — so the masking uses
-    *global* coordinates.  ref.tap_sum (inside the core) pins the f64
-    accumulation order, keeping the engine bit-identical to the oracle
-    in the validation dtype.
+    grid, the shard offset in the distributed path — so the ghost
+    restoration uses *global* coordinates.  ref.tap_sum (inside the
+    core) pins the f64 accumulation order, keeping the engine
+    bit-identical to the oracle in the validation dtype.
     """
     ndim = len(tile)
     starts = tuple(org_ref[d] + pl.program_id(d) * tile[d]
                    for d in range(ndim))
     o_ref[...] = _ref.masked_window_sweeps(
         x_ref[...], taps, halo, tile, sweeps, starts, grid_shape,
-        acc_dtype).astype(o_ref.dtype)
+        acc_dtype, mode=mode, value=value).astype(o_ref.dtype)
 
 
 def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
@@ -110,13 +118,15 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
     """``sweeps`` fused applications to a block that already carries its
     ``sweeps*halo``-wide halo.
 
-    ``window`` has shape ``out_shape + 2*sweeps*halo`` per dim; the
-    interior's origin sits at global coordinate ``origin`` (static ints
-    or a traced value, e.g. ``axis_index`` inside shard_map) of a
-    ``grid_shape`` grid, against which the zero-boundary masking between
-    fused sweeps is evaluated.  This is the shard-local entry point of
-    the distributed deep-halo path; :func:`stencil_sweep` wraps it for
-    the single-device case (zero origin, window = zero-padded grid).
+    ``window`` has shape ``out_shape + 2*sweeps*halo`` per dim and must
+    carry the ``spec.boundary`` ghost extension in its halo layers
+    (``ref.pad_boundary`` on a single device, the halo exchange in the
+    distributed path); the interior's origin sits at global coordinate
+    ``origin`` (static ints or a traced value, e.g. ``axis_index`` inside
+    shard_map) of a ``grid_shape`` grid, against which the between-sweep
+    ghost restoration is evaluated.  This is the shard-local entry point
+    of the distributed deep-halo path; :func:`stencil_sweep` wraps it for
+    the single-device case (zero origin, window = boundary-padded grid).
     """
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
@@ -145,7 +155,8 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
 
     kernel = functools.partial(
         _kernel, taps=tuple(spec.taps), halo=halo, tile=tile, sweeps=sweeps,
-        grid_shape=grid_shape, acc_dtype=_acc_dtype(window.dtype))
+        grid_shape=grid_shape, acc_dtype=_acc_dtype(window.dtype),
+        mode=spec.boundary_mode, value=spec.boundary_value)
 
     def in_map(*ids):
         return tuple(i * t for i, t in zip(ids, tile))
@@ -167,7 +178,8 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
                   tile: Sequence[int] | int | None = None,
                   sweeps: int = 1,
                   interpret: bool = True) -> jax.Array:
-    """``sweeps`` fused zero-boundary applications of ``spec`` to ``grid``.
+    """``sweeps`` fused applications of ``spec`` to ``grid`` under the
+    spec's boundary mode.
 
     Equivalent to ``sweeps`` chained :func:`repro.core.ref.apply_stencil`
     calls, but with a single HBM read/write per point instead of one per
@@ -179,7 +191,8 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
     wide = tuple(sweeps * h for h in spec.halo)
-    window = jnp.pad(grid, [(w, w) for w in wide])
+    window = _ref.pad_boundary(grid, wide, spec.boundary_mode,
+                               spec.boundary_value)
     return stencil_window_sweep(
         spec, window, grid.shape, (0,) * spec.ndim, grid.shape,
         tile=tile, sweeps=sweeps, interpret=interpret)

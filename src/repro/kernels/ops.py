@@ -13,8 +13,9 @@ from .swa import sliding_window_attention
 def stencil_apply(spec: StencilSpec, grid: jax.Array,
                   tile=None, sweeps: int = 1,
                   interpret: bool = True) -> jax.Array:
-    """``sweeps`` fused applications of ``spec`` via the unified engine;
-    zero boundary; accepts an optional leading batch dimension."""
+    """``sweeps`` fused applications of ``spec`` via the unified engine
+    under ``spec.boundary`` (zero / constant(c) / periodic / reflect);
+    accepts an optional leading batch dimension."""
     return engine.stencil_apply(spec, grid, tile=tile, sweeps=sweeps,
                                 interpret=interpret)
 

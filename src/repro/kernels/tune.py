@@ -11,6 +11,11 @@ additionally wall-clocks the top analytic candidates on the real array
 The candidate lists keep the innermost dimension a multiple of 128 (VPU
 lane width) and the second-minor a multiple of 8 (f32 sublanes); rank-1
 tiles are lane multiples.  See docs/kernels.md for how to extend them.
+
+The spec's boundary mode participates in the ranking (``reflect`` charges
+the between-sweep ghost re-mirroring gather) and in the cache key —
+``autotune`` is memoized on the full ``StencilSpec``, which includes
+``boundary``.
 """
 from __future__ import annotations
 
