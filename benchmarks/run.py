@@ -13,18 +13,36 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)                       # the benchmarks package
 sys.path.insert(0, os.path.join(_ROOT, "src"))  # repro
 
-from benchmarks.paper_figs import (fig01_roofline, fig10_speedup,  # noqa: E402
+from benchmarks.paper_figs import (bench4_schema_errors,  # noqa: E402
+                                   fig01_roofline, fig10_speedup,
                                    fig11_energy, fig12_gpu, fig13_pims,
                                    fig14_mapping, stencil_wallclock,
-                                   table4_instructions, temporal_blocking)
+                                   structure_bench, table4_instructions,
+                                   temporal_blocking)
 from benchmarks.lm_roofline import lm_roofline  # noqa: E402
 from benchmarks.stencil_cluster import stencil_cluster_mapping  # noqa: E402
 
 BENCHES = (
     fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu, fig13_pims,
     fig14_mapping, table4_instructions, temporal_blocking,
-    stencil_wallclock, lm_roofline, stencil_cluster_mapping,
+    structure_bench, stencil_wallclock, lm_roofline,
+    stencil_cluster_mapping,
 )
+
+
+def write_bench4(detail: dict, root: str = _ROOT) -> str:
+    """Write the structure bench's BENCH_4.json at the repo root (the
+    perf-trajectory artifact future PRs diff against); schema-checked
+    before writing."""
+    payload = detail["bench4"]
+    errs = bench4_schema_errors(payload)
+    if errs:
+        raise SystemExit(f"BENCH_4 schema invalid: {errs}")
+    path = os.path.join(root, "BENCH_4.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -40,6 +58,8 @@ def main() -> None:
             print(f"{name},{us:.3f},{derived}")
     with open(os.path.join(out_dir, "paper_validation.json"), "w") as f:
         json.dump(all_detail, f, indent=1, default=float)
+    print(f"# wrote {write_bench4(all_detail['structure_bench'])}",
+          file=sys.stderr)
     summaries = {k: v.get("summary") for k, v in all_detail.items()
                  if isinstance(v, dict) and v.get("summary")}
     print("# --- summaries ---", file=sys.stderr)

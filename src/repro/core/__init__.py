@@ -2,7 +2,8 @@
 from .stencil import (StencilSpec, PAPER_STENCILS, DOMAIN_SIZES, jacobi1d,
                       jacobi2d, seven_point_1d, blur2d, heat3d, star33_3d,
                       advect1d, advect2d, domain_for, parse_boundary,
-                      BOUNDARY_MODES)
+                      BOUNDARY_MODES, STRUCTURES, factor_taps,
+                      Factorization, FactorTerm, AxisKernel)
 from .ref import apply_stencil, run_iterations, pad_boundary
 from .streams import plan_streams, StreamPlan
 from .isa import assemble, decode, Instr, Program
@@ -15,6 +16,7 @@ __all__ = [
     "StencilSpec", "PAPER_STENCILS", "DOMAIN_SIZES", "jacobi1d", "jacobi2d",
     "seven_point_1d", "blur2d", "heat3d", "star33_3d", "advect1d",
     "advect2d", "domain_for", "parse_boundary", "BOUNDARY_MODES",
+    "STRUCTURES", "factor_taps", "Factorization", "FactorTerm", "AxisKernel",
     "apply_stencil", "run_iterations", "pad_boundary", "plan_streams",
     "StreamPlan",
     "assemble", "decode", "Instr", "Program", "SpuVM", "run_program",

@@ -41,13 +41,24 @@ from .stencil import StencilSpec
 Backend = Literal["ref", "pallas"]
 
 
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → auto-detect: interpret mode exactly when the default
+    backend is CPU (Pallas TPU kernels need real hardware; CPU needs the
+    interpreter).  An explicit bool is passed through.  This is the one
+    encoding of the policy — the kernel entry points
+    (``repro.kernels.engine``) re-export it."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
 class CasperEngine:
     def __init__(
         self,
         spec: StencilSpec,
         backend: Backend = "ref",
         segment: SegmentConfig | None = None,
-        interpret: bool = True,
+        interpret: bool | None = None,
         sweeps: int = 1,
         tile: Sequence[int] | Literal["auto"] | None = None,
     ):
@@ -56,7 +67,8 @@ class CasperEngine:
         self.spec = spec
         self.backend = backend
         self.segment = segment or SegmentConfig()
-        self.interpret = interpret
+        # None -> auto-detect: interpret Pallas on CPU, compile on TPU.
+        self.interpret = resolve_interpret(interpret)
         self.sweeps = sweeps
         self.tile = tile
         self.program: Program = assemble(spec)

@@ -168,7 +168,8 @@ def _local_multisweep(spec: StencilSpec, sharded_axes: Sequence[str | None],
         raise ValueError(f"unknown backend {backend!r}")
     return _ref.masked_window_sweeps(
         padded, spec.taps, halo, x.shape, sweeps, origin, grid_shape,
-        x.dtype, mode=mode, value=value).astype(x.dtype)
+        x.dtype, mode=mode, value=value,
+        structure=spec.structure).astype(x.dtype)
 
 
 def distributed_stencil_fn(
@@ -180,7 +181,7 @@ def distributed_stencil_fn(
     sweeps: int = 1,
     backend: Literal["ref", "pallas"] = "ref",
     tile: Sequence[int] | Literal["auto"] | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Callable[[jax.Array], jax.Array]:
     """Build a jit-able global-array stencil function on ``mesh``.
 
@@ -196,7 +197,11 @@ def distributed_stencil_fn(
     fused steps plus one narrower remainder step.  ``backend`` selects
     the shard-local compute: the ``ref`` einsum path or the Pallas kernel
     (``tile``/``tile="auto"`` as in the single-device engine,
-    ``interpret`` for CPU).
+    ``interpret=None`` auto-detects: interpret mode on CPU, compiled on
+    TPU).  Both backends dispatch per-application compute on
+    ``spec.structure`` through the shared masked multi-sweep core, so
+    structure-specialized specs stay f64 bit-identical across the
+    distributed path too.
     """
     if len(grid_axes) != spec.ndim:
         raise ValueError("grid_axes must have one entry per grid dim")

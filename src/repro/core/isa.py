@@ -96,6 +96,12 @@ class Program:
         return self.plan.boundary
 
     @property
+    def structure(self) -> str:
+        """Tap-structure class of the source spec (recorded on the
+        stream plan): star / separable / dense."""
+        return self.plan.structure
+
+    @property
     def words(self) -> tuple[int, ...]:
         return tuple(i.encode() for i in self.instrs)
 
@@ -103,21 +109,35 @@ class Program:
     def n_instrs(self) -> int:
         return len(self.instrs)
 
+    @property
+    def structured_n_instrs(self) -> int:
+        """Per-point instruction count of the structure-specialized
+        compute (the factored MAC count from the stream plan); equals
+        ``n_instrs`` for dense/star programs, smaller when a separable
+        box was factored (e.g. 15 vs 33 for ``star33_3d``)."""
+        return self.plan.structured_ops or self.n_instrs
+
     def dynamic_instruction_count(
-        self, points: int, n_spus: int = 16, vector_width: int = 8
+        self, points: int, n_spus: int = 16, vector_width: int = 8,
+        structured: bool = False,
     ) -> dict[str, int]:
         """Dynamic instruction counts, Table 4 methodology.
 
         Each SPU instruction covers ``vector_width`` output points (512-bit /
-        f64).  Points are split evenly across SPUs.
+        f64).  Points are split evenly across SPUs.  ``structured=True``
+        counts the factored op sequence (``structured_n_instrs``) instead
+        of the dense tap list — what an SPU executing the
+        structure-specialized program would retire; the default stays
+        dense for like-for-like comparison against the paper's Table 4.
         """
+        n = self.structured_n_instrs if structured else self.n_instrs
         per_spu_points = -(-points // n_spus)
         per_spu_vectors = -(-per_spu_points // vector_width)
-        per_spu = per_spu_vectors * self.n_instrs
+        per_spu = per_spu_vectors * n
         return {
             "per_spu": per_spu,
             "total": per_spu * n_spus,
-            "scalar_equivalent": points * self.n_instrs,
+            "scalar_equivalent": points * n,
         }
 
     def loads_per_vector(self) -> dict[str, int]:

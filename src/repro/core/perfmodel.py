@@ -228,10 +228,22 @@ def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
     First-order bottleneck model in the style of the Casper/CPU models
     above: time = max(HBM traffic, VPU compute) + grid sequencing.  The
     traffic term charges each tile one window read (halo widened to
-    ``sweeps*halo``) plus one tile write; the compute term charges every
-    intermediate application at its shrinking window size, padded up to
-    the VPU (sublane, lane) grain so misaligned tiles pay for the lanes
-    they waste.
+    ``sweeps*halo``) plus one tile write — against the *unpadded* grid;
+    the pad-free engine materializes boundary ghosts in-kernel, so no
+    host-side pad traffic enters (the removed pad copy is charged to
+    the unfused baseline by ``kernels.engine.hbm_traffic``).  The
+    compute term charges every intermediate application at its
+    shrinking window size, padded up to the VPU (sublane, lane) grain
+    so misaligned tiles pay for the lanes they waste.
+
+    The compute term is **structure-aware**: per-point flops come from
+    ``spec.structured_flops_per_point()`` — the factored MAC count of
+    separable specs (e.g. 15 tap-ops for ``star33_3d`` instead of 33;
+    star/dense compute the plain tap chain and keep their dense count)
+    — and each extra computed term holds one more live window-sized
+    intermediate, charged to the VMEM resident set.  Cheaper compute
+    and the extra resident intermediates both shift the autotuner's
+    tile choice for separable specs.
 
     The boundary mode enters through ``spec.boundary``: traffic is
     mode-independent (the window is fetched whole either way), but
@@ -242,10 +254,14 @@ def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
     halo = spec.halo
     n_tiles = math.prod(-(-n // t) for n, t in zip(shape, tile))
     acc_itemsize = max(itemsize, 4)
+    terms = spec.factorization.compute_terms
+    n_terms = 1 if terms is None else len(terms)
 
     window = math.prod(t + 2 * sweeps * h for t, h in zip(tile, halo))
-    # Resident set: fetched window + same-size accumulator + output block.
-    vmem = 2 * window * acc_itemsize + math.prod(tile) * itemsize
+    # Resident set: fetched window + same-size accumulator + output block,
+    # plus one live window-sized intermediate per extra factored term.
+    vmem = ((1 + n_terms) * window * acc_itemsize
+            + math.prod(tile) * itemsize)
     if vmem > TPU_VMEM_BYTES:
         return float("inf")
 
@@ -259,7 +275,8 @@ def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
             dims[-2] = _ceil_to(dims[-2], VPU_SUBLANES)
         return math.prod(dims)
 
-    flops = sum(padded_points(sweeps - 1 - s) * spec.flops_per_point()
+    flops = sum(padded_points(sweeps - 1 - s)
+                * spec.structured_flops_per_point()
                 for s in range(sweeps)) * n_tiles
     if spec.boundary_mode == "reflect":
         # one elementwise gather pass per axis per intermediate window

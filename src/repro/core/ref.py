@@ -18,7 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .stencil import StencilSpec, parse_boundary
+from .stencil import StencilSpec, _classify, factor_taps, parse_boundary
 
 
 def periodic_index(idx, n: int):
@@ -98,10 +98,20 @@ def tap_sum(windows, coeffs, dtype) -> jax.Array:
     products are materialized and summed through a ``fori_loop`` carry:
     XLA cannot reassociate across loop iterations, so every
     implementation that routes its accumulation through this helper
-    agrees bit-for-bit, including the pure-numpy oracle.  Narrower
+    agrees bit-for-bit, including the pure-numpy oracle
+    (:func:`tap_sum_numpy` walks the identical order).  Narrower
     dtypes keep the plain chain (stencils are bandwidth-bound, the
     regrouping is perf-irrelevant, and f32/bf16 parity is
     tolerance-checked anyway).
+
+    Separable (structure-specialized) specs don't flatten to one call
+    of this helper: their pinned order *is the factored order* —
+    :func:`factored_window_apply` routes each 1-D factor pass and the
+    final term-sum through ``tap_sum``, in the term/offset order fixed
+    by :func:`repro.core.stencil.factor_taps`, applied identically by
+    the jnp oracle, the numpy oracle, the Pallas kernel and the
+    distributed shard-local path (star/dense specs keep the plain tap
+    order below).
     """
     dtype = jnp.dtype(dtype)
     if dtype == jnp.dtype(jnp.float64):
@@ -116,10 +126,71 @@ def tap_sum(windows, coeffs, dtype) -> jax.Array:
     return acc
 
 
+def tap_sum_numpy(windows, coeffs, dtype) -> np.ndarray:
+    """Numpy analogue of :func:`tap_sum`: products accumulated from zero
+    in tap order — arithmetic-identical to the f64 ``fori_loop`` carry,
+    so the numpy and jnp oracles stay bit-equal in f64."""
+    dtype = np.dtype(dtype)
+    acc = np.zeros(windows[0].shape, dtype)
+    for c, w in zip(coeffs, windows):
+        acc = acc + dtype.type(c) * w
+    return acc
+
+
+def _slice_jnp(x, starts, sizes):
+    return jax.lax.dynamic_slice(x, tuple(starts), tuple(sizes))
+
+
+def _slice_np(x, starts, sizes):
+    return x[tuple(slice(s, s + n) for s, n in zip(starts, sizes))]
+
+
+def factored_window_apply(x, terms, halo, out_shape, dtype, *,
+                          slice_fn=_slice_jnp, tsum=tap_sum):
+    """One structure-specialized stencil application of a factored tap
+    set to window ``x`` (shape ``out_shape + 2*halo`` per dim).
+
+    Each :class:`~repro.core.stencil.FactorTerm` runs as sequential 1-D
+    axis passes; a pass consumes its factor's radius along its axis and
+    trims every axis that carries no later factor down to the interior,
+    so a single-factor (star) term slices ``x`` exactly like the dense
+    path and a multi-factor (separable) term touches
+    ``sum(len(f.offsets))`` windows instead of the box product.  Every
+    pass and the final term-sum accumulate through ``tsum``
+    (:func:`tap_sum`), so the factored order is pinned in f64 — the
+    numpy variant (``slice_fn=_slice_np, tsum=tap_sum_numpy``) walks the
+    identical arithmetic and stays bit-equal.
+    """
+    ndim = len(out_shape)
+    vals = []
+    for term in terms:
+        radius = {f.axis: f.radius for f in term.factors}
+        org = [-h for h in halo]                # window coord of y's origin
+        y = x
+        pending = [f.axis for f in term.factors]
+        for f in term.factors:
+            pending = pending[1:]               # axes with later factors
+            new_org = [-(radius[d] if d in pending else 0)
+                       for d in range(ndim)]
+            ext = [n - 2 * o for n, o in zip(out_shape, new_org)]
+            wins = []
+            for off in f.offsets:
+                starts = [new_org[d] - org[d] + (off if d == f.axis else 0)
+                          for d in range(ndim)]
+                wins.append(slice_fn(y, starts, ext))
+            y = tsum(wins, f.coeffs, dtype)
+            org = new_org
+        vals.append(y)
+    if len(vals) == 1:
+        return vals[0]
+    return tsum(vals, (1.0,) * len(vals), dtype)
+
+
 def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
                          sweeps: int, starts, grid_shape,
                          acc_dtype, *, mode: str = "zero",
-                         value: float = 0.0) -> jax.Array:
+                         value: float = 0.0,
+                         structure: str = "auto") -> jax.Array:
     """Apply ``sweeps`` fused stencil applications to one widened window.
 
     ``window`` carries ``sweeps`` halo layers per side around an
@@ -146,9 +217,15 @@ def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
       wrapped interior counterparts, so the ghosts evolve correctly on
       their own.
 
-    Accumulation routes through :func:`tap_sum`, so f64 results stay
+    Per-application compute dispatches on ``structure`` (the spec's
+    tap-structure class, see :func:`repro.core.stencil.factor_taps`):
+    separable specs run :func:`factored_window_apply`; star and dense
+    specs the per-tap path (a star tap chain is already the
+    ``sum(2r_d)+1`` optimum).  Either way accumulation routes through
+    :func:`tap_sum` in the structure's pinned order, so f64 results stay
     bit-identical to chained :func:`apply_stencil` calls under every
-    mode.
+    mode (``"auto"`` re-classifies from ``taps``; pass the spec's
+    ``structure`` to honor a forced-dense override).
 
     This is the shared core of the Pallas kernel (``starts`` =
     ``program_id * tile``) and the distributed shard-local path
@@ -157,15 +234,20 @@ def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
     """
     ndim = len(out_shape)
     coeffs = [c for _, c in taps]
+    terms = (None if structure == "dense"
+             else _classify(ndim, tuple(taps)).compute_terms)
     x = window.astype(acc_dtype)
     for s in range(sweeps):
         rem = sweeps - 1 - s          # halo layers left after this sweep
         cur = tuple(t + 2 * rem * h for t, h in zip(out_shape, halo))
-        acc = tap_sum(
-            [jax.lax.dynamic_slice(
-                x, tuple(h + o for h, o in zip(halo, off)), cur)
-             for off, _ in taps],
-            coeffs, acc_dtype)
+        if terms is not None:
+            acc = factored_window_apply(x, terms, halo, cur, acc_dtype)
+        else:
+            acc = tap_sum(
+                [jax.lax.dynamic_slice(
+                    x, tuple(h + o for h, o in zip(halo, off)), cur)
+                 for off, _ in taps],
+                coeffs, acc_dtype)
         if rem:
             if mode in ("zero", "constant"):
                 valid = None
@@ -190,12 +272,18 @@ def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
 def apply_stencil(spec: StencilSpec, grid: jax.Array) -> jax.Array:
     """``out[p] = sum_k c_k * in[p + off_k]``, one sweep; taps past the
     edge are served by ``spec.boundary`` (zero / constant / periodic /
-    reflect)."""
+    reflect) and compute dispatches on ``spec.structure`` (star/separable
+    specs run the factored path, in the same pinned order as every other
+    layer)."""
     if grid.ndim != spec.ndim:
         raise ValueError(f"grid rank {grid.ndim} != spec ndim {spec.ndim}")
     halo = spec.halo
     padded = pad_boundary(grid, halo, spec.boundary_mode,
                           spec.boundary_value)
+    terms = factor_taps(spec).compute_terms
+    if terms is not None:
+        return factored_window_apply(padded, terms, halo, grid.shape,
+                                     grid.dtype)
     windows = [
         jax.lax.dynamic_slice(
             padded, tuple(h + o for h, o in zip(halo, off)), grid.shape)
@@ -221,10 +309,18 @@ def pad_boundary_numpy(grid: np.ndarray, widths, mode: str = "zero",
 
 
 def apply_stencil_numpy(spec: StencilSpec, grid: np.ndarray) -> np.ndarray:
-    """O(points x taps) loop-free numpy oracle (independent of jax)."""
+    """Loop-free numpy oracle (independent of jax): ``O(points x
+    tap_ops)`` — dispatches on ``spec.structure`` exactly like
+    :func:`apply_stencil`, walking the identical factored order so the
+    two stay bit-equal in f64."""
     halo = spec.halo
     padded = pad_boundary_numpy(grid, halo, spec.boundary_mode,
                                 spec.boundary_value)
+    terms = factor_taps(spec).compute_terms
+    if terms is not None:
+        return factored_window_apply(padded, terms, halo, grid.shape,
+                                     grid.dtype, slice_fn=_slice_np,
+                                     tsum=tap_sum_numpy)
     out = np.zeros_like(grid)
     for off, coeff in spec.taps:
         idx = tuple(

@@ -27,8 +27,11 @@ temporal blocking and the distributed wrap-ring exchange.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import itertools
 import math
 import re
+from fractions import Fraction
 from typing import Mapping, Sequence
 
 Offset = tuple[int, ...]
@@ -36,6 +39,10 @@ Tap = tuple[Offset, float]
 
 #: The recognized boundary modes (``constant`` is spelled ``constant(c)``).
 BOUNDARY_MODES = ("zero", "constant", "periodic", "reflect")
+
+#: The recognized tap-structure classes (``"auto"`` resolves to one of
+#: these at spec construction).  See :func:`factor_taps`.
+STRUCTURES = ("star", "separable", "dense")
 
 _CONSTANT_RE = re.compile(r"^constant\((?P<c>[^)]+)\)$")
 
@@ -59,6 +66,192 @@ def parse_boundary(boundary: str) -> tuple[str, float]:
         "'periodic' or 'reflect'")
 
 
+# ---------------------------------------------------------------------------
+# Tap-structure classification (the paper's §4 star/box distinction)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AxisKernel:
+    """A 1-D tap kernel along one axis: ``y[p] = sum_j coeffs[j] *
+    x[p + offsets[j]·e_axis]``."""
+
+    axis: int
+    offsets: tuple[int, ...]
+    coeffs: tuple[float, ...]
+
+    @property
+    def radius(self) -> int:
+        return max(abs(o) for o in self.offsets)
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorTerm:
+    """An outer product of 1-D kernels, applied as sequential axis passes
+    (ascending axis order).  A single-factor term is a star arm (or the
+    center tap); a multi-factor term is a separable box."""
+
+    factors: tuple[AxisKernel, ...]
+
+    @property
+    def tap_ops(self) -> int:
+        """MACs per output point: the sum (not product) of factor sizes."""
+        return sum(len(f.offsets) for f in self.factors)
+
+
+@dataclasses.dataclass(frozen=True)
+class Factorization:
+    """How a tap set is computed: a sum of :class:`FactorTerm` s, or the
+    dense per-tap fallback (``terms is None``).
+
+    ``tap_ops`` is the per-point MAC count of the factored form (equals
+    ``n_taps`` for star/dense; strictly smaller when a separable box was
+    factored).  The term order — and the offset order inside each factor —
+    is the *pinned f64 accumulation order*: every layer (jnp oracle, numpy
+    oracle, Pallas kernel, distributed shard-local path) walks it
+    identically, which is what keeps them bit-identical in f64.
+    """
+
+    structure: str
+    terms: tuple[FactorTerm, ...] | None
+    tap_ops: int
+
+    @property
+    def compute_terms(self) -> tuple[FactorTerm, ...] | None:
+        """Terms the compute layers actually run — factored passes only
+        when they beat the dense tap path (``separable``).  A star
+        spec's per-tap chain already meets the ``sum(2r_d)+1``
+        temporary bound with a single fused accumulation (``tap_ops ==
+        n_taps``), so specializing it further would only trade the
+        fused chain for extra per-axis intermediates (measured ~equal
+        or slightly slower); star therefore keeps the seed's dense tap
+        order — and its exact f64 bit pattern."""
+        return self.terms if self.structure == "separable" else None
+
+
+def _nonzero_axes(off: Offset) -> tuple[int, ...]:
+    return tuple(d for d, o in enumerate(off) if o)
+
+
+def _star_terms(ndim: int, taps: Sequence[Tap]) -> tuple[FactorTerm, ...]:
+    """Per-axis 1-D kernels for an axis-aligned tap set; the center tap is
+    merged into the first axis that carries any taps."""
+    per_axis: dict[int, list[tuple[int, float]]] = {d: [] for d in range(ndim)}
+    center = [c for o, c in taps if not any(o)]
+    for o, c in taps:
+        axes = _nonzero_axes(o)
+        if axes:
+            per_axis[axes[0]].append((o[axes[0]], c))
+    first = min((d for d in range(ndim) if per_axis[d]), default=0)
+    if center:
+        per_axis[first].append((0, center[0]))
+    terms = []
+    for d in range(ndim):
+        if per_axis[d]:
+            offs, cs = zip(*sorted(per_axis[d]))
+            terms.append(FactorTerm((AxisKernel(d, offs, cs),)))
+    return tuple(terms)
+
+
+def _separable_terms(
+    ndim: int, taps: Sequence[Tap], coupled: Sequence[Tap]
+) -> tuple[FactorTerm, ...] | None:
+    """Try to factor the coupled (≥2 nonzero offset components) taps into
+    one outer product of 1-D kernels, verified *exactly* in rationals
+    (every float coefficient is an exact binary rational).  Remaining
+    axis-aligned taps outside the factored box ride along as star terms.
+    Returns ``None`` when the coupled taps do not factor."""
+    core_axes = sorted({d for o, _ in coupled for d in _nonzero_axes(o)})
+    r = {d: max(abs(o[d]) for o, _ in coupled) for d in core_axes}
+    coeff = {o: Fraction(c) for o, c in taps}       # exact binary rationals
+
+    def cget(o: Offset) -> Fraction:
+        return coeff.get(o, Fraction(0))
+
+    def axis_offset(d: int, i: int) -> Offset:
+        o = [0] * ndim
+        o[d] = i
+        return tuple(o)
+
+    s = cget((0,) * ndim)                           # pivot: the center tap
+    if s == 0:
+        return None
+    u = {d: {i: cget(axis_offset(d, i)) for i in range(-r[d], r[d] + 1)}
+         for d in core_axes}
+    k = len(core_axes)
+    # Verify D[p]·s^(k-1) == prod_d u_d[p_d] for every coupled position of
+    # the core box (including empty positions, whose coefficient is 0).
+    for idx in itertools.product(*[range(-r[d], r[d] + 1)
+                                   for d in core_axes]):
+        if sum(1 for i in idx if i) < 2:
+            continue                                # axis slices define u
+        o = [0] * ndim
+        for d, i in zip(core_axes, idx):
+            o[d] = i
+        lhs = cget(tuple(o)) * s ** (k - 1)
+        rhs = functools.reduce(lambda a, b: a * b,
+                               (u[d][i] for d, i in zip(core_axes, idx)))
+        if lhs != rhs:
+            return None
+
+    # Realize the factors in floats: the first core axis keeps the exact
+    # tap coefficients; later axes carry the (possibly rounded) ratio to
+    # the pivot, so the product reproduces the box to within 1 ulp per
+    # factor (exactly, whenever the ratios are representable).
+    factors = []
+    for d in core_axes:
+        offs = tuple(i for i in range(-r[d], r[d] + 1) if u[d][i] != 0)
+        if not offs:
+            return None
+        cs = tuple(float(u[d][i]) if d == core_axes[0]
+                   else float(u[d][i] / s) for i in offs)
+        factors.append(AxisKernel(d, offs, cs))
+
+    def in_core(o: Offset) -> bool:
+        return all(abs(o[d]) <= r[d] if d in r else o[d] == 0
+                   for d in range(ndim))
+
+    remainder = [(o, c) for o, c in taps if not in_core(o)]
+    return (FactorTerm(tuple(factors)),) + _star_terms(ndim, remainder)
+
+
+@functools.lru_cache(maxsize=512)
+def _classify(ndim: int, taps: tuple[Tap, ...]) -> Factorization:
+    coupled = tuple((o, c) for o, c in taps if len(_nonzero_axes(o)) > 1)
+    if not coupled:
+        return Factorization("star", _star_terms(ndim, taps), len(taps))
+    terms = _separable_terms(ndim, taps, coupled)
+    if terms is not None:
+        ops = sum(t.tap_ops for t in terms)
+        if ops < len(taps):                 # specialize only when it wins
+            return Factorization("separable", terms, ops)
+    return Factorization("dense", None, len(taps))
+
+
+def factor_taps(spec: "StencilSpec") -> Factorization:
+    """The spec's compute plan: how its taps are classified and factored.
+
+    * ``"star"`` — every tap offset has at most one nonzero component;
+      its per-tap shift-add chain already achieves the ``sum(2r_d)+1``
+      window-temporary bound (never the ``prod(2r_d+1)`` of a box), so
+      the compute layers keep it (``compute_terms is None``) and the
+      jaxpr guard pins the bound; ``terms`` still records the per-axis
+      kernel view for the ISA/instruction accounting.
+    * ``"separable"`` — the coupled taps factor *exactly* (verified in
+      rationals) into an outer product of 1-D kernels, computed as
+      sequential axis passes; leftover axis taps (e.g. ``star33_3d``'s
+      distance-2 arms around its separable ``[1,2,1]³`` core) ride along
+      as star terms.
+    * ``"dense"`` — the per-tap fallback (also forced by
+      ``spec.with_structure("dense")``, which benchmarks use to measure
+      the specialization win).
+
+    The factored term/offset order is the pinned f64 accumulation order
+    shared by every implementation layer — see :func:`repro.core.ref.tap_sum`.
+    """
+    if spec.structure == "dense":
+        return Factorization("dense", None, spec.n_taps)
+    return _classify(spec.ndim, spec.taps)
+
+
 @dataclasses.dataclass(frozen=True)
 class StencilSpec:
     """A fixed stencil pattern: ``out[p] = sum_k coeff_k * in[p + off_k]``.
@@ -66,12 +259,20 @@ class StencilSpec:
     ``boundary`` selects how taps past the grid edge are served (see the
     module docstring mode table); the default ``"zero"`` preserves the
     seed's zero-padding convention.
+
+    ``structure`` records the tap-structure class every compute layer
+    dispatches on (see :func:`factor_taps`): the default ``"auto"``
+    resolves to the classified ``"star"`` / ``"separable"`` / ``"dense"``
+    at construction; passing ``"dense"`` explicitly *forces* the dense
+    per-tap path (the benchmarks' baseline), while passing ``"star"`` /
+    ``"separable"`` asserts the classification (raises on mismatch).
     """
 
     name: str
     ndim: int
     taps: tuple[Tap, ...]
     boundary: str = "zero"
+    structure: str = "auto"
 
     def __post_init__(self):
         if self.ndim < 1 or self.ndim > 3:
@@ -84,6 +285,17 @@ class StencilSpec:
                 raise ValueError(f"duplicate tap offset {off}")
             seen.add(off)
         parse_boundary(self.boundary)   # raises on unknown spelling
+        classified = _classify(self.ndim, self.taps).structure
+        if self.structure == "auto":
+            object.__setattr__(self, "structure", classified)
+        elif self.structure not in STRUCTURES:
+            raise ValueError(
+                f"unknown structure {self.structure!r}; expected 'auto' or "
+                f"one of {STRUCTURES}")
+        elif self.structure != "dense" and self.structure != classified:
+            raise ValueError(
+                f"{self.name}: taps classify as {classified!r}, not "
+                f"{self.structure!r} (only 'dense' may be forced)")
 
     @property
     def n_taps(self) -> int:
@@ -103,6 +315,17 @@ class StencilSpec:
         """Same taps under a different boundary mode (validated)."""
         return dataclasses.replace(self, boundary=boundary)
 
+    def with_structure(self, structure: str) -> "StencilSpec":
+        """Same taps under a different structure setting (validated);
+        ``with_structure("dense")`` forces the dense per-tap path — the
+        baseline the structure benchmarks measure against."""
+        return dataclasses.replace(self, structure=structure)
+
+    @property
+    def factorization(self) -> Factorization:
+        """The compute plan for this spec (see :func:`factor_taps`)."""
+        return factor_taps(self)
+
     @property
     def halo(self) -> tuple[int, ...]:
         """Per-dimension halo radius (max |offset| along that dim)."""
@@ -121,7 +344,19 @@ class StencilSpec:
 
     def flops_per_point(self) -> int:
         # one multiply-accumulate (2 flops) per tap, as in the paper's SPU.
+        # This is the *dense* count (the paper's accounting); the factored
+        # compute paths do structured_flops_per_point() instead.
         return 2 * self.n_taps
+
+    def structured_flops_per_point(self) -> int:
+        """Flops per point of the actual compute path: one MAC per
+        factored tap-op plus one add per extra computed term (the
+        term-sum); equals ``flops_per_point()`` for star/dense, whose
+        compute path is the dense chain."""
+        fz = factor_taps(self)
+        terms = fz.compute_terms
+        n_terms = 1 if terms is None else len(terms)
+        return 2 * fz.tap_ops + (n_terms - 1)
 
     def bytes_per_point(self, itemsize: int) -> int:
         """Minimum streaming traffic per output point (compulsory only).

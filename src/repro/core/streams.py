@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from .stencil import StencilSpec
+from .stencil import StencilSpec, factor_taps
 
 MAX_SHIFT = 7          # 3-bit shift amount
 MAX_STREAMS = 16       # 4-bit stream index (incl. the output stream 0)
@@ -54,6 +54,8 @@ class StreamPlan:
     taps: tuple[PlannedTap, ...]         # in execution order
     consts: tuple[float, ...]            # constant buffer contents
     boundary: str = "zero"               # how out-of-grid elements are served
+    structure: str = "dense"             # tap-structure class (stencil.py)
+    structured_ops: int = 0              # factored MACs/point (0 = n_taps)
 
     @property
     def n_input_streams(self) -> int:
@@ -108,6 +110,7 @@ def plan_streams(spec: StencilSpec) -> StreamPlan:
             f"stencil {spec.name} has {len(consts)} distinct coefficients; "
             f"the 4-bit constant index caps at {MAX_CONSTS}")
 
+    fz = factor_taps(spec)
     return StreamPlan(
         spec_name=spec.name,
         ndim=spec.ndim,
@@ -115,4 +118,6 @@ def plan_streams(spec: StencilSpec) -> StreamPlan:
         taps=tuple(taps),
         consts=tuple(consts),
         boundary=spec.boundary,
+        structure=spec.structure,
+        structured_ops=fz.tap_ops,
     )

@@ -11,6 +11,16 @@ Out-of-grid stream elements are served per the program's boundary mode
 value or to the wrapped/mirrored interior element, exactly like the
 oracles, so VM-vs-oracle parity holds under every mode.
 
+The VM executes the *dense* tap program — the literal semantics of the
+paper's SPU hardware, one MAC per tap.  Structure specialization lives
+above the ISA: the stream plan records the spec's tap-structure class
+and factored op count (``plan.structure`` / ``plan.structured_ops``),
+and ``Program.dynamic_instruction_count(..., structured=True)`` reports
+what a structure-aware SPU program would retire (Table 4's factored
+column), while the oracles/kernels compute in the factored order.  The
+dense VM result matches the factored oracles to f64 rounding (~1 ulp,
+the reassociation bound), which the tests pin at ``atol=1e-12``.
+
 The VM also keeps the event counters (loads by alignment, stores, MACs,
 instructions) that feed the performance/energy model (`perfmodel.py`).
 """

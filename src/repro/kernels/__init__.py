@@ -13,17 +13,17 @@ from .swa import sliding_window_attention
 from .tune import autotune, autotune_measured
 
 
-def stencil1d(spec, grid, tile: int = 512, interpret: bool = True):
+def stencil1d(spec, grid, tile: int = 512, interpret: bool | None = None):
     """Compat shim for the seed's 1-D kernel (one sweep)."""
     return engine.stencil_sweep(spec, grid, tile=(tile,), interpret=interpret)
 
 
-def stencil2d(spec, grid, tile=(32, 256), interpret: bool = True):
+def stencil2d(spec, grid, tile=(32, 256), interpret: bool | None = None):
     """Compat shim for the seed's 2-D kernel (one sweep)."""
     return engine.stencil_sweep(spec, grid, tile=tile, interpret=interpret)
 
 
-def stencil3d(spec, grid, tile=(4, 16, 128), interpret: bool = True):
+def stencil3d(spec, grid, tile=(4, 16, 128), interpret: bool | None = None):
     """Compat shim for the seed's 3-D kernel (one sweep)."""
     return engine.stencil_sweep(spec, grid, tile=tile, interpret=interpret)
 

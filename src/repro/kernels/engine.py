@@ -36,9 +36,34 @@ counterparts).  Each is the closed form of the oracle re-padding before
 every sweep, so fused results stay f64 bit-identical to chained oracle
 applications under all four modes — see docs/boundaries.md.
 
+**Pad-free fused sweeps**: :func:`stencil_sweep` no longer materializes a
+boundary-padded copy of the whole grid per fused call.  The kernel's
+input window is fetched straight from the unpadded grid with a *clamped*
+element-offset BlockSpec, and the boundary ghosts are materialized
+*inside* the kernel from the mode's closed form — a shift-realign gather
+plus fill masking (zero/constant), the in-window mirror gather
+(reflect), or a per-axis wrap gather against global coordinates
+(periodic — whole grid as the block, for VMEM-sized grids).  The ghost
+values are bitwise identical to what ``ref.pad_boundary`` would have
+produced, so f64 parity with the oracle is untouched while the per-call
+``O(grid)`` pad read+write round-trip disappears (:func:`hbm_traffic`
+now charges it to the unfused baseline only).  Grids smaller than one
+fetch window, and periodic grids past the whole-grid VMEM budget, fall
+back to the legacy padded path.
+
+**Structure specialization**: per-application compute inside the kernel
+dispatches on ``spec.structure`` (star / separable / dense — see
+``repro.core.stencil.factor_taps``) through the shared
+``ref.masked_window_sweeps`` core, so separable specs (``blur2d``,
+``star33_3d``'s core) run factored axis passes with
+``O(sum)`` instead of ``O(prod)`` tap temporaries, bit-identically to
+the oracle in f64.
+
 A leading batch dimension is handled by `vmap` (see
 :func:`stencil_apply`), so a stack of independent grids shares one
-compiled kernel.
+compiled kernel.  ``interpret=None`` (the default everywhere) resolves
+to interpret mode exactly when the backend is CPU, so TPU users get
+compiled kernels without passing a flag.
 """
 from __future__ import annotations
 
@@ -51,7 +76,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import ref as _ref
-from repro.core.stencil import StencilSpec
+from repro.core import perfmodel as _pm
+from repro.core.engine import resolve_interpret  # canonical auto-detect
+from repro.core.stencil import StencilSpec, factor_taps
 
 # Default output tiles per rank: innermost dim 128-aligned for the VPU
 # lane width, sublane-sized second-minor (see /opt guides; validated in
@@ -62,9 +89,31 @@ DEFAULT_TILES: dict[int, tuple[int, ...]] = {
     3: (4, 16, 128),
 }
 
+# The pad-free periodic path makes the whole (unpadded) grid the input
+# block — the wrap gather needs the far edge — which is only sane while
+# the grid comfortably fits the VMEM working set next to the window and
+# intermediates; larger periodic grids keep the wrap-padded fallback
+# (window-sized fetches, matching the hbm_traffic/pallas_tile_cost
+# window model).
+_PERIODIC_WHOLE_GRID_BYTES = _pm.TPU_VMEM_BYTES // 4
+
 
 def default_tile(ndim: int) -> tuple[int, ...]:
     return DEFAULT_TILES[ndim]
+
+
+def _normalize_tile(spec: StencilSpec,
+                    tile: Sequence[int] | int | None) -> tuple[int, ...]:
+    """Default/int-promote/validate a tile for ``spec`` (shared by the
+    pad-free and window entry points)."""
+    if tile is None:
+        tile = DEFAULT_TILES[spec.ndim]
+    elif isinstance(tile, int):
+        tile = (tile,)
+    tile = tuple(int(t) for t in tile)
+    if len(tile) != spec.ndim:
+        raise ValueError(f"tile rank {len(tile)} != spec ndim {spec.ndim}")
+    return tile
 
 
 def element_blockspec(block_shape, index_map) -> pl.BlockSpec:
@@ -85,7 +134,7 @@ def _acc_dtype(dtype) -> jnp.dtype:
 
 
 def _kernel(x_ref, org_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
-            acc_dtype, mode, value):
+            acc_dtype, mode, value, structure):
     """Apply ``sweeps`` fused stencil applications to one resident window.
 
     The window enters with ``sweeps`` halo layers per side; the masked
@@ -105,7 +154,60 @@ def _kernel(x_ref, org_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
                    for d in range(ndim))
     o_ref[...] = _ref.masked_window_sweeps(
         x_ref[...], taps, halo, tile, sweeps, starts, grid_shape,
-        acc_dtype, mode=mode, value=value).astype(o_ref.dtype)
+        acc_dtype, mode=mode, value=value,
+        structure=structure).astype(o_ref.dtype)
+
+
+def _padfree_kernel(x_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
+                    acc_dtype, mode, value, structure):
+    """Pad-free variant: the fetched block comes straight from the
+    *unpadded* grid, and this kernel materializes the window's boundary
+    ghosts itself from the mode's closed form.
+
+    For the fill/mirror modes the BlockSpec start was clamped into the
+    grid, so the fetch holds the right elements at a (per-tile) shifted
+    position: a per-axis realign gather restores window alignment, then
+    out-of-grid positions are overwritten with the fill value
+    (zero/constant) or the in-window mirror source (reflect) — bitwise
+    what ``ref.pad_boundary`` would have put there.  For periodic the
+    whole (unpadded) grid is the block and the window is assembled by a
+    per-axis wrap gather ``grid[(g0 + j) mod N]`` — the exact periodic
+    extension at any depth.  The multi-sweep core then runs unchanged.
+    """
+    ndim = len(tile)
+    wide = tuple(sweeps * h for h in halo)
+    win = tuple(t + 2 * w for t, w in zip(tile, wide))
+    s_true = tuple(pl.program_id(d) * tile[d] - wide[d] for d in range(ndim))
+    x = x_ref[...]
+    if mode == "periodic":
+        for d in range(ndim):
+            idx = (s_true[d] + jnp.arange(win[d], dtype=jnp.int32)) \
+                % grid_shape[d]
+            x = jnp.take(x, idx, axis=d)
+    else:
+        for d in range(ndim):
+            s_clip = jnp.clip(s_true[d], 0, grid_shape[d] - win[d])
+            idx = jnp.clip(s_true[d] - s_clip
+                           + jnp.arange(win[d], dtype=jnp.int32),
+                           0, win[d] - 1)
+            x = jnp.take(x, idx, axis=d)
+        if mode in ("zero", "constant"):
+            valid = None
+            for d in range(ndim):
+                g = s_true[d] + jax.lax.broadcasted_iota(jnp.int32, win, d)
+                vd = (g >= 0) & (g < grid_shape[d])
+                valid = vd if valid is None else valid & vd
+            fill = jnp.asarray(value if mode == "constant" else 0.0, x.dtype)
+            x = jnp.where(valid, x, fill)
+        else:                                   # reflect
+            for d in range(ndim):
+                x = _ref.reflect_gather(x, d, s_true[d], grid_shape[d],
+                                        win[d])
+    starts = tuple(pl.program_id(d) * tile[d] for d in range(ndim))
+    o_ref[...] = _ref.masked_window_sweeps(
+        x, taps, halo, tile, sweeps, starts, grid_shape,
+        acc_dtype, mode=mode, value=value,
+        structure=structure).astype(o_ref.dtype)
 
 
 def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
@@ -114,7 +216,7 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
                          grid_shape: Sequence[int],
                          tile: Sequence[int] | int | None = None,
                          sweeps: int = 1,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool | None = None) -> jax.Array:
     """``sweeps`` fused applications to a block that already carries its
     ``sweeps*halo``-wide halo.
 
@@ -130,13 +232,8 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
     """
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
-    if tile is None:
-        tile = DEFAULT_TILES[spec.ndim]
-    elif isinstance(tile, int):
-        tile = (tile,)
-    tile = tuple(int(t) for t in tile)
-    if len(tile) != spec.ndim:
-        raise ValueError(f"tile rank {len(tile)} != spec ndim {spec.ndim}")
+    interpret = resolve_interpret(interpret)
+    tile = _normalize_tile(spec, tile)
     halo = spec.halo
     out_shape = tuple(out_shape)
     grid_shape = tuple(int(n) for n in grid_shape)
@@ -156,7 +253,8 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
     kernel = functools.partial(
         _kernel, taps=tuple(spec.taps), halo=halo, tile=tile, sweeps=sweeps,
         grid_shape=grid_shape, acc_dtype=_acc_dtype(window.dtype),
-        mode=spec.boundary_mode, value=spec.boundary_value)
+        mode=spec.boundary_mode, value=spec.boundary_value,
+        structure=spec.structure)
 
     def in_map(*ids):
         return tuple(i * t for i, t in zip(ids, tile))
@@ -177,37 +275,92 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
 def stencil_sweep(spec: StencilSpec, grid: jax.Array,
                   tile: Sequence[int] | int | None = None,
                   sweeps: int = 1,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """``sweeps`` fused applications of ``spec`` to ``grid`` under the
-    spec's boundary mode.
+    spec's boundary mode, **pad-free**: the kernel fetches its window
+    straight from the unpadded grid and materializes boundary ghosts
+    in-kernel (see :func:`_padfree_kernel`), so no host-side padded copy
+    of the grid is built per fused call.
 
     Equivalent to ``sweeps`` chained :func:`repro.core.ref.apply_stencil`
     calls, but with a single HBM read/write per point instead of one per
     sweep.  ``grid`` rank must equal ``spec.ndim`` (1-3); use
-    :func:`stencil_apply` for a leading batch dimension.
+    :func:`stencil_apply` for a leading batch dimension.  Grids smaller
+    than one fetch window — and periodic grids too large to sit whole
+    in VMEM next to the working set (the wrap gather's block is the
+    whole grid) — fall back to the legacy padded path
+    (:func:`stencil_window_sweep` on a ``ref.pad_boundary`` window —
+    identical results, the ghosts are bitwise equal either way).
     """
     if grid.ndim != spec.ndim:
         raise ValueError(f"grid rank {grid.ndim} != spec ndim {spec.ndim}")
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
-    wide = tuple(sweeps * h for h in spec.halo)
-    window = _ref.pad_boundary(grid, wide, spec.boundary_mode,
-                               spec.boundary_value)
-    return stencil_window_sweep(
-        spec, window, grid.shape, (0,) * spec.ndim, grid.shape,
-        tile=tile, sweeps=sweeps, interpret=interpret)
+    interpret = resolve_interpret(interpret)
+    tile = _normalize_tile(spec, tile)
+    halo = spec.halo
+    wide = tuple(sweeps * h for h in halo)
+    win = tuple(t + 2 * w for t, w in zip(tile, wide))
+    periodic = spec.boundary_mode == "periodic"
+    grid_bytes = math.prod(grid.shape) * grid.dtype.itemsize
+    if (periodic and grid_bytes > _PERIODIC_WHOLE_GRID_BYTES) or (
+            not periodic and any(w > n for w, n in zip(win, grid.shape))):
+        # Padded fallback: the clamped fetch needs win <= N per dim
+        # (tiny grids), and the periodic wrap gather needs the whole
+        # grid as its block, which must stay well inside VMEM — beyond
+        # that, window-sized fetches from a wrap-padded copy are the
+        # right trade on real hardware (and what the traffic model
+        # charges).
+        window = _ref.pad_boundary(grid, wide, spec.boundary_mode,
+                                   spec.boundary_value)
+        return stencil_window_sweep(
+            spec, window, grid.shape, (0,) * spec.ndim, grid.shape,
+            tile=tile, sweeps=sweeps, interpret=interpret)
+
+    grid_dims = tuple(-(-n // t) for n, t in zip(grid.shape, tile))
+    padded = tuple(d * t for d, t in zip(grid_dims, tile))
+    n_shape = grid.shape
+
+    kernel = functools.partial(
+        _padfree_kernel, taps=tuple(spec.taps), halo=halo, tile=tile,
+        sweeps=sweeps, grid_shape=n_shape, acc_dtype=_acc_dtype(grid.dtype),
+        mode=spec.boundary_mode, value=spec.boundary_value,
+        structure=spec.structure)
+
+    if periodic:
+        # whole grid as the block: the wrap gather needs the far edge.
+        in_spec = element_blockspec(n_shape, lambda *ids: (0,) * spec.ndim)
+    else:
+        def in_map(*ids):
+            return tuple(
+                jnp.clip(i * t - w, 0, n - wn)
+                for i, t, w, n, wn in zip(ids, tile, wide, n_shape, win))
+        in_spec = element_blockspec(win, in_map)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid_dims,
+        in_specs=[in_spec],
+        out_specs=pl.BlockSpec(tile, lambda *ids: ids),
+        out_shape=jax.ShapeDtypeStruct(padded, grid.dtype),
+        interpret=interpret,
+    )(grid)
+    if padded == n_shape:
+        return out
+    return out[tuple(slice(0, n) for n in n_shape)]
 
 
 def stencil_apply(spec: StencilSpec, grid: jax.Array,
                   tile: Sequence[int] | int | None = None,
                   sweeps: int = 1,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """Rank-dispatching entry point with an optional leading batch dim.
 
     ``grid.ndim == spec.ndim``    → one grid;
     ``grid.ndim == spec.ndim+1``  → dim 0 is a batch of independent
     grids, mapped with ``jax.vmap`` over one shared kernel.
     """
+    interpret = resolve_interpret(interpret)
     if grid.ndim == spec.ndim:
         return stencil_sweep(spec, grid, tile=tile, sweeps=sweeps,
                              interpret=interpret)
@@ -223,17 +376,22 @@ def stencil_apply(spec: StencilSpec, grid: jax.Array,
 def run_sweeps(spec: StencilSpec, grid: jax.Array, iters: int,
                tile: Sequence[int] | int | None = None,
                sweeps: int = 1,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """``iters`` total applications, fused ``sweeps`` at a time.
 
-    Decomposes ``iters = q*sweeps + r``: ``q`` fused calls plus one
-    remainder call, so any ``iters`` is exact for any blocking factor.
+    Decomposes ``iters = q*sweeps + r``: ``q`` fused calls rolled into a
+    single ``lax.scan`` (one traced/compiled step instead of ``q``
+    unrolled copies of the kernel graph) plus one remainder call, so any
+    ``iters`` is exact for any blocking factor.
     """
+    interpret = resolve_interpret(interpret)
     q, r = divmod(iters, sweeps)
     out = grid
-    for _ in range(q):
-        out = stencil_apply(spec, out, tile=tile, sweeps=sweeps,
-                            interpret=interpret)
+    if q:
+        def body(g, _):
+            return stencil_apply(spec, g, tile=tile, sweeps=sweeps,
+                                 interpret=interpret), None
+        out, _ = jax.lax.scan(body, out, None, length=q)
     if r:
         out = stencil_apply(spec, out, tile=tile, sweeps=r,
                             interpret=interpret)
@@ -248,11 +406,27 @@ def hbm_traffic(spec: StencilSpec, shape: Sequence[int],
                 sweeps: int = 1, itemsize: int = 4) -> dict[str, float]:
     """Bytes moved between HBM and VMEM for ``sweeps`` applications.
 
-    ``fused``    — one kernel invocation with a ``sweeps*halo`` window:
-                   each tile reads ``prod(tile + 2*sweeps*halo)`` once and
-                   writes ``prod(tile)`` once.
-    ``unfused``  — ``sweeps`` invocations with single-halo windows.
-    ``reduction`` = unfused / fused, the headline ~sweeps× saving (§2).
+    ``fused``    — one **pad-free** kernel invocation with a
+                   ``sweeps*halo`` window: each tile reads
+                   ``prod(tile + 2*sweeps*halo)`` once and writes
+                   ``prod(tile)`` once, straight against the unpadded
+                   grid (ghosts are materialized in-kernel, no pad
+                   traffic).
+    ``unfused``  — ``sweeps`` single-sweep invocations of the legacy
+                   padded pipeline: single-halo windows *plus*, per
+                   invocation, the host-side ``pad_boundary`` round-trip
+                   the pipeline used to pay — read the ``prod(shape)``
+                   grid once and write the ``prod(shape + 2*halo)``
+                   padded copy once.  (The seed's model omitted this
+                   term on both sides, under-reporting the baseline and
+                   misguiding sweep selection.)
+    ``reduction``      = unfused / fused — now > sweeps, since fusing
+                         also deletes the per-sweep pad copy (§2's
+                         ~sweeps× window saving stacks with it).
+    ``legacy_fused_bytes`` — what the *padded* fused pipeline moved
+                   (``fused`` + one ``sweeps*halo``-deep pad copy):
+                   strictly greater than ``fused_bytes`` for every spec,
+                   the modeled win of the pad-free path alone.
     """
     if tile is None:
         tile = DEFAULT_TILES[spec.ndim]
@@ -260,16 +434,25 @@ def hbm_traffic(spec: StencilSpec, shape: Sequence[int],
     halo = spec.halo
     n_tiles = math.prod(-(-n // t) for n, t in zip(shape, tile))
     out_b = math.prod(tile) * itemsize
+    grid_b = math.prod(shape) * itemsize
 
     def window_bytes(layers: int) -> int:
         return math.prod(t + 2 * layers * h
                          for t, h in zip(tile, halo)) * itemsize
 
+    def pad_copy_bytes(layers: int) -> int:
+        padded = math.prod(n + 2 * layers * h
+                           for n, h in zip(shape, halo)) * itemsize
+        return grid_b + padded          # read grid once, write padded copy
+
     fused = n_tiles * (window_bytes(sweeps) + out_b)
-    unfused = sweeps * n_tiles * (window_bytes(1) + out_b)
+    unfused = sweeps * (n_tiles * (window_bytes(1) + out_b)
+                        + pad_copy_bytes(1))
     return {
         "fused_bytes": float(fused),
         "unfused_bytes": float(unfused),
         "reduction": unfused / fused,
         "halo_overhead": n_tiles * window_bytes(sweeps) / fused,
+        "pad_bytes_unfused": float(sweeps * pad_copy_bytes(1)),
+        "legacy_fused_bytes": float(fused + pad_copy_bytes(sweeps)),
     }

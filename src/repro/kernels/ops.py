@@ -12,10 +12,11 @@ from .swa import sliding_window_attention
 
 def stencil_apply(spec: StencilSpec, grid: jax.Array,
                   tile=None, sweeps: int = 1,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """``sweeps`` fused applications of ``spec`` via the unified engine
     under ``spec.boundary`` (zero / constant(c) / periodic / reflect);
-    accepts an optional leading batch dimension."""
+    accepts an optional leading batch dimension.  ``interpret=None``
+    auto-detects (interpret mode on CPU, compiled on TPU)."""
     return engine.stencil_apply(spec, grid, tile=tile, sweeps=sweeps,
                                 interpret=interpret)
 

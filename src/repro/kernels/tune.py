@@ -13,9 +13,15 @@ lane width) and the second-minor a multiple of 8 (f32 sublanes); rank-1
 tiles are lane multiples.  See docs/kernels.md for how to extend them.
 
 The spec's boundary mode participates in the ranking (``reflect`` charges
-the between-sweep ghost re-mirroring gather) and in the cache key —
-``autotune`` is memoized on the full ``StencilSpec``, which includes
-``boundary``.
+the between-sweep ghost re-mirroring gather) and so does its tap
+*structure*: the cost model's compute term uses the factored per-point
+flop count (``spec.structured_flops_per_point()``) and its VMEM
+feasibility check charges one live window-sized intermediate per
+factored term, so separable specs (``blur2d``, ``star33_3d``) rank
+tiles by their actual — cheaper — factored compute.  Both enter the
+cache key: ``autotune`` is memoized on the full ``StencilSpec``, which
+includes ``boundary`` and ``structure`` (a forced-dense spec tunes
+separately).
 """
 from __future__ import annotations
 
@@ -85,7 +91,7 @@ def autotune(spec: StencilSpec, shape: tuple[int, ...], sweeps: int = 1,
 
 def autotune_measured(spec: StencilSpec, grid, sweeps: int = 1,
                       top_k: int = 3, reps: int = 2,
-                      interpret: bool = True) -> TuneResult:
+                      interpret: bool | None = None) -> TuneResult:
     """Re-rank the ``top_k`` analytic candidates by wall clock on ``grid``."""
     from . import engine  # local import: tune is importable without jax use
 
