@@ -20,29 +20,45 @@ from benchmarks.paper_figs import (bench4_schema_errors,  # noqa: E402
                                    structure_bench, table4_instructions,
                                    temporal_blocking)
 from benchmarks.lm_roofline import lm_roofline  # noqa: E402
+from benchmarks.serving import (bench5_schema_errors,  # noqa: E402
+                                serving_bench)
 from benchmarks.stencil_cluster import stencil_cluster_mapping  # noqa: E402
 
 BENCHES = (
     fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu, fig13_pims,
     fig14_mapping, table4_instructions, temporal_blocking,
-    structure_bench, stencil_wallclock, lm_roofline,
+    structure_bench, stencil_wallclock, serving_bench, lm_roofline,
     stencil_cluster_mapping,
 )
+
+
+def _write_bench(detail: dict, key: str, schema_errors, filename: str,
+                 root: str) -> str:
+    payload = detail[key]
+    errs = schema_errors(payload)
+    if errs:
+        raise SystemExit(f"{filename} schema invalid: {errs}")
+    path = os.path.join(root, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    return path
 
 
 def write_bench4(detail: dict, root: str = _ROOT) -> str:
     """Write the structure bench's BENCH_4.json at the repo root (the
     perf-trajectory artifact future PRs diff against); schema-checked
     before writing."""
-    payload = detail["bench4"]
-    errs = bench4_schema_errors(payload)
-    if errs:
-        raise SystemExit(f"BENCH_4 schema invalid: {errs}")
-    path = os.path.join(root, "BENCH_4.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-        f.write("\n")
-    return path
+    return _write_bench(detail, "bench4", bench4_schema_errors,
+                        "BENCH_4.json", root)
+
+
+def write_bench5(detail: dict, root: str = _ROOT) -> str:
+    """Write the serving bench's BENCH_5.json at the repo root
+    (batched-vs-sequential throughput + plan-cache stats);
+    schema-checked before writing."""
+    return _write_bench(detail, "bench5", bench5_schema_errors,
+                        "BENCH_5.json", root)
 
 
 def main() -> None:
@@ -59,6 +75,8 @@ def main() -> None:
     with open(os.path.join(out_dir, "paper_validation.json"), "w") as f:
         json.dump(all_detail, f, indent=1, default=float)
     print(f"# wrote {write_bench4(all_detail['structure_bench'])}",
+          file=sys.stderr)
+    print(f"# wrote {write_bench5(all_detail['serving_bench'])}",
           file=sys.stderr)
     summaries = {k: v.get("summary") for k, v in all_detail.items()
                  if isinstance(v, dict) and v.get("summary")}

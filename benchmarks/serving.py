@@ -1,0 +1,177 @@
+"""BENCH_5: batched stencil serving through the plan pipeline.
+
+Measures the :class:`repro.serve.stencil.StencilServer` on a
+bucket-friendly mixed-shape workload: heterogeneous ``(spec-name, grid,
+iters)`` requests, bucketed by plan-cache key and executed as one
+vmapped fused call per bucket, against the per-request sequential
+baseline running the *same* cached plans.  Alternating min-of-reps
+timing (the BENCH_4 discipline) keeps the ratio robust on shared CI
+boxes.
+
+The payload written to ``BENCH_5.json`` records the batched and
+sequential wall times, the throughput ratio (CI smoke asserts ≥ 3×),
+bucket structure, and the plan-cache hit statistics of a warm serve
+(which must lower and autotune nothing).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as _plan
+from repro.serve.stencil import StencilRequest, StencilServer
+
+BENCH5_SCHEMA = "casper-bench-5"
+BENCH5_VERSION = 1
+
+
+def bucket_friendly_workload(n_hot: int = 48) -> list[StencilRequest]:
+    """A serving mix dominated by one hot (spec, shape, iters) bucket —
+    the traffic shape batching exists for — plus smaller heterogeneous
+    buckets (different spec, different shape, different rank, a periodic
+    boundary) so the bucketing itself is exercised."""
+    rng = np.random.default_rng(7)
+
+    def grid(shape):
+        # host buffers, as requests arrive off the wire; the server pays
+        # one device transfer per bucket on the batched path and one per
+        # request on the sequential path
+        return rng.standard_normal(shape).astype(np.float32)
+
+    reqs = [StencilRequest("jacobi2d", grid((32, 64)), 8)
+            for _ in range(n_hot)]
+    reqs += [StencilRequest("advect2d", grid((32, 64)), 8)
+             for _ in range(8)]
+    reqs += [StencilRequest("jacobi1d", grid((512,)), 6) for _ in range(6)]
+    reqs += [StencilRequest("heat3d", grid((8, 12, 16)), 4)
+             for _ in range(2)]
+    # shuffle so bucketing has to regroup, deterministically
+    order = rng.permutation(len(reqs))
+    return [reqs[i] for i in order]
+
+
+def _mintime(fns: dict, reps: int) -> dict:
+    for fn in fns.values():
+        fn()                                    # warm up / compile / lower
+    best = {k: float("inf") for k in fns}
+    for _ in range(reps):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def serving_bench(reps: int = 5, n_hot: int = 48, sweeps: int = 4):
+    """Batched vs sequential serving on the bucket-friendly workload.
+
+    Returns the standard ``(rows, detail)`` bench pair; ``detail`` keys:
+    ``bench5`` (the ``BENCH_5.json`` payload) and ``summary``.
+    """
+    server = StencilServer(backend="ref", sweeps=sweeps)
+    requests = bucket_friendly_workload(n_hot=n_hot)
+
+    # correctness first (also the cold run that populates the caches):
+    # batched results == sequential results, in order
+    batched_res, _cold_stats = server.serve(requests)
+    seq_res, _ = server.serve_sequential(requests)
+    max_err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(batched_res, seq_res))
+
+    best = _mintime(
+        {"batched": lambda: server.serve(requests),
+         "sequential": lambda: server.serve_sequential(requests)},
+        reps=reps)
+    # stats of a warm batched serve: a fully-warm cache must lower and
+    # autotune nothing
+    _, warm_stats = server.serve(requests)
+
+    n = len(requests)
+    ratio = best["sequential"] / best["batched"]
+    payload = {
+        "schema": BENCH5_SCHEMA,
+        "version": BENCH5_VERSION,
+        "config": {
+            "backend": server.backend, "sweeps": sweeps, "reps": reps,
+            "jax_backend": jax.default_backend(),
+        },
+        "workload": {
+            "n_requests": n,
+            "n_hot": n_hot,
+            "buckets": warm_stats.buckets and [
+                {k: (list(b[k]) if isinstance(b[k], tuple) else b[k])
+                 for k in ("spec", "shape", "iters", "size")}
+                for b in warm_stats.buckets],
+        },
+        "results": {
+            "batched_s": best["batched"],
+            "sequential_s": best["sequential"],
+            "throughput_ratio": ratio,
+            "requests_per_s_batched": n / best["batched"],
+            "requests_per_s_sequential": n / best["sequential"],
+            "n_buckets": warm_stats.n_buckets,
+            "max_abs_err_batched_vs_sequential": max_err,
+            "cache": {
+                **warm_stats.plan_cache,
+                "process": _plan.plan_cache_stats(),
+            },
+        },
+    }
+    rows = [
+        ("serve_batched_requests_per_s", best["batched"] * 1e6 / n,
+         round(n / best["batched"], 1)),
+        ("serve_sequential_requests_per_s", best["sequential"] * 1e6 / n,
+         round(n / best["sequential"], 1)),
+        ("serve_throughput_ratio", 0.0, round(ratio, 2)),
+    ]
+    detail = {
+        "bench5": payload,
+        "summary": {
+            "throughput_ratio": ratio,
+            "n_buckets": warm_stats.n_buckets,
+            "warm_cache_hit_rate": warm_stats.plan_cache["hit_rate"],
+            "warm_cache_lowers": warm_stats.plan_cache["lowers"],
+        },
+    }
+    return rows, detail
+
+
+def bench5_schema_errors(payload) -> list[str]:
+    """Validate a BENCH_5.json payload; returns a list of problems
+    (empty = schema-valid).  Pinned so future PRs appending to the perf
+    trajectory keep the file machine-readable."""
+    errs = []
+    if not isinstance(payload, dict):
+        return ["payload is not an object"]
+    if payload.get("schema") != BENCH5_SCHEMA:
+        errs.append(f"schema != {BENCH5_SCHEMA!r}")
+    if not isinstance(payload.get("version"), int):
+        errs.append("version missing/not int")
+    if not isinstance(payload.get("config"), dict):
+        errs.append("config missing")
+    wl = payload.get("workload")
+    if not isinstance(wl, dict) or not isinstance(
+            wl.get("n_requests"), int):
+        errs.append("workload.n_requests missing/not int")
+    res = payload.get("results")
+    if not isinstance(res, dict):
+        return errs + ["results missing"]
+    for key in ("batched_s", "sequential_s", "throughput_ratio",
+                "requests_per_s_batched", "requests_per_s_sequential",
+                "max_abs_err_batched_vs_sequential"):
+        if not isinstance(res.get(key), (int, float)):
+            errs.append(f"results.{key} not a number")
+    if not isinstance(res.get("n_buckets"), int):
+        errs.append("results.n_buckets not an int")
+    cache = res.get("cache")
+    if not isinstance(cache, dict):
+        errs.append("results.cache missing")
+    else:
+        for key in ("hits", "misses", "lowers", "autotune_calls",
+                    "hit_rate"):
+            if not isinstance(cache.get(key), (int, float)):
+                errs.append(f"results.cache.{key} not a number")
+    return errs

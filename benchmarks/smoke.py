@@ -2,8 +2,11 @@
 check, a periodic-advection boundary check (non-zero boundary end to
 end), the structure-specialization check (BENCH_4 schema + the
 separable >=1.5x speedup acceptance), an 8-forced-host-device
-distributed temporal-blocking check, and the serve
-determinism/decode-count check — a couple of minutes on a laptop CPU.
+distributed temporal-blocking check, the serve
+determinism/decode-count check, and the batched stencil-serving check
+(BENCH_5 schema + the >=3x batched-vs-sequential throughput acceptance
+on the bucket-friendly mixed-shape workload + warm plan-cache
+0-lower/0-autotune pin) — a couple of minutes on a laptop CPU.
 
 The full harness (``benchmarks/run.py``) also runs measured-wallclock and
 256-device subprocess benches; this entry point keeps CI fast and
@@ -153,6 +156,37 @@ def structure_smoke() -> dict:
             "n_rows": len(rows)}
 
 
+def stencil_serving_smoke() -> dict:
+    """Mixed-shape batched stencil serving end to end: run the BENCH_5
+    serving bench on the bucket-friendly workload, schema-check its
+    payload, write the BENCH_5.json perf-trajectory artifact, and assert
+
+    * batched throughput >= 3x sequential per-request dispatch on the
+      same cached plans (the acceptance criterion of the serving
+      front-end),
+    * the warm serve's plan-cache delta shows 0 lowers / 0 autotunes
+      and a 100% hit rate (repeat shapes cost nothing), and
+    * batched results equal sequential results bitwise-close.
+    """
+    from benchmarks.run import write_bench5
+    from benchmarks.serving import bench5_schema_errors, serving_bench
+    rows, detail = serving_bench()
+    payload = detail["bench5"]
+    errs = bench5_schema_errors(payload)
+    assert not errs, errs
+    path = write_bench5(detail)
+    res = payload["results"]
+    assert res["throughput_ratio"] >= 3.0, res
+    assert res["max_abs_err_batched_vs_sequential"] < 1e-5, res
+    cache = res["cache"]
+    assert cache["lowers"] == 0 and cache["autotune_calls"] == 0, cache
+    assert cache["hit_rate"] == 1.0, cache
+    return {"bench5_path": path,
+            "throughput_ratio": round(res["throughput_ratio"], 2),
+            "n_buckets": res["n_buckets"],
+            "warm_hit_rate": cache["hit_rate"]}
+
+
 def serve_smoke() -> dict:
     """Serve determinism: same key -> same tokens, and exactly
     ``n_tokens - 1`` jitted decode steps per generate call."""
@@ -222,8 +256,12 @@ def main() -> None:
     srv = serve_smoke()
     print(f"serve_smoke_decode_calls,0.000,"
           f"{srv['decode_calls_per_generate']}")
+    ssrv = stencil_serving_smoke()
+    print(f"stencil_serving_smoke_throughput_ratio,0.000,"
+          f"{ssrv['throughput_ratio']}")
     print(f"# smoke OK: {n_rows} rows, engine parity err {err:.2e}, "
-          f"structure {struct}, distributed {dist}, serve {srv}",
+          f"structure {struct}, distributed {dist}, serve {srv}, "
+          f"stencil serving {ssrv}",
           file=sys.stderr)
 
 

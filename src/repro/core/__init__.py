@@ -5,6 +5,9 @@ from .stencil import (StencilSpec, PAPER_STENCILS, DOMAIN_SIZES, jacobi1d,
                       BOUNDARY_MODES, STRUCTURES, factor_taps,
                       Factorization, FactorTerm, AxisKernel)
 from .ref import apply_stencil, run_iterations, pad_boundary
+from .plan import (ExecutionPlan, PLAN_CACHE, PlanCache, lower,
+                   plan_cache_stats, execute, run_plan, resolve_interpret,
+                   ghost_strategy_for, exchange_strategy_for)
 from .streams import plan_streams, StreamPlan
 from .isa import assemble, decode, Instr, Program
 from .vm import SpuVM, run_program
@@ -22,4 +25,7 @@ __all__ = [
     "assemble", "decode", "Instr", "Program", "SpuVM", "run_program",
     "SegmentConfig", "access_counts", "remote_fraction",
     "distributed_stencil_fn", "exchange_halo_1axis", "CasperEngine",
+    "ExecutionPlan", "PLAN_CACHE", "PlanCache", "lower", "plan_cache_stats",
+    "execute", "run_plan", "resolve_interpret", "ghost_strategy_for",
+    "exchange_strategy_for",
 ]

@@ -6,12 +6,22 @@ Composes the pieces the way the paper's API (Table 1) does:
     out    = engine.run(grid, iters=100)        # single host/device
     step   = engine.distributed_fn(mesh, ("sx", "sy"))   # multi-device
 
-New in the unified-engine refactor: ``sweeps=t`` applies temporal
-blocking — the Pallas backend fuses ``t`` Jacobi applications per kernel
-invocation (one HBM read/write per point per ``t`` sweeps instead of per
-sweep), and ``run(grid, iters)`` decomposes ``iters`` into fused blocks
-plus an exact remainder.  ``tile="auto"`` picks the block shape with the
-:mod:`repro.kernels.tune` autotuner the first time a grid shape is seen.
+The engine is now a thin front over the **ExecutionPlan lowering
+pipeline** (:mod:`repro.core.plan`): the first time a grid shape is
+seen, ``plan.lower`` resolves — once — the tap factorization, the
+boundary-ghost strategy, the (auto)tuned tile, the ``iters = q*sweeps +
+r`` decomposition and the assembled SPU program, and memoizes the plan
+in the process-wide plan cache.  ``run``/``step`` just execute the plan;
+a *second* engine with identical options reuses the same jitted runner
+and the same cached plans — zero retraces, zero autotune sweeps (the
+cache counters pin this, see ``tests/test_plan.py``).
+
+``sweeps=t`` applies temporal blocking — the Pallas backend fuses ``t``
+Jacobi applications per kernel invocation — and ``run(grid, iters)``
+decomposes ``iters`` into fused blocks plus an exact remainder whose
+narrower plan also comes from the plan cache (never a fresh autotune at
+trace time).  ``tile="auto"`` resolves through the autotuner inside
+``plan.lower`` and nowhere else.
 
 Boundary handling rides on the spec: construct the engine with e.g.
 ``CasperEngine(jacobi2d().with_boundary("periodic"))`` and every path —
@@ -27,29 +37,18 @@ is what `initStencilcode` would broadcast to the SPUs.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Literal, Sequence
+from typing import Literal, Sequence
 
 import jax
-import jax.numpy as jnp
 
-from . import ref as _ref
+from . import plan as _plan
 from .halo import distributed_stencil_fn
 from .isa import Program, assemble
+from .plan import resolve_interpret  # canonical home is core.plan
 from .segment import SegmentConfig
 from .stencil import StencilSpec
 
 Backend = Literal["ref", "pallas"]
-
-
-def resolve_interpret(interpret: bool | None) -> bool:
-    """``None`` → auto-detect: interpret mode exactly when the default
-    backend is CPU (Pallas TPU kernels need real hardware; CPU needs the
-    interpreter).  An explicit bool is passed through.  This is the one
-    encoding of the policy — the kernel entry points
-    (``repro.kernels.engine``) re-export it."""
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
 
 
 class CasperEngine:
@@ -64,6 +63,8 @@ class CasperEngine:
     ):
         if sweeps < 1:
             raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+        if backend not in ("ref", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.spec = spec
         self.backend = backend
         self.segment = segment or SegmentConfig()
@@ -72,11 +73,10 @@ class CasperEngine:
         self.sweeps = sweeps
         self.tile = tile
         self.program: Program = assemble(spec)
-        self._step = self._build_step(sweeps)
         self._frozen = True
 
     def __setattr__(self, name, value):
-        # run() caches its jitted loop (cached_property) closing over the
+        # run() delegates to a process-wide jitted runner keyed on the
         # init-time sweeps/backend/tile; mutating them afterwards would
         # silently keep executing stale fused blocks.  The engine is
         # therefore frozen: construct a new engine to change options.
@@ -86,52 +86,32 @@ class CasperEngine:
                 "construct a new engine instead")
         super().__setattr__(name, value)
 
-    def _resolve_tile(self, shape: tuple[int, ...], itemsize: int,
-                      sweeps: int):
-        if self.tile == "auto":
-            from repro.kernels import tune  # lazy: optional dep
-            return tune.autotune(self.spec, shape, sweeps=sweeps,
-                                 itemsize=itemsize).tile
-        return self.tile
-
-    def _build_step(self, sweeps: int) -> Callable[[jax.Array], jax.Array]:
-        if self.backend == "ref":
-            def ref_step(grid):
-                for _ in range(sweeps):
-                    grid = _ref.apply_stencil(self.spec, grid)
-                return grid
-            return ref_step
-        if self.backend == "pallas":
-            from repro.kernels import ops as kops  # lazy: optional dep
-            def pallas_step(grid):
-                tile = self._resolve_tile(grid.shape, grid.dtype.itemsize,
-                                          sweeps)
-                return kops.stencil_apply(
-                    self.spec, grid, tile=tile,
-                    sweeps=sweeps, interpret=self.interpret)
-            return pallas_step
-        raise ValueError(f"unknown backend {self.backend!r}")
+    def plan_for(self, shape: Sequence[int], dtype,
+                 sweeps: int | None = None) -> _plan.ExecutionPlan:
+        """The (cached) execution plan this engine uses for ``shape``."""
+        return _plan.lower(
+            self.spec, shape, dtype, backend=self.backend,
+            sweeps=self.sweeps if sweeps is None else sweeps,
+            tile=self.tile, interpret=self.interpret)
 
     def step(self, grid: jax.Array) -> jax.Array:
         """One fused block: ``self.sweeps`` stencil applications."""
-        return self._step(grid)
+        return _plan.execute(
+            self.plan_for(_plan._grid_shape_for(self.spec, grid),
+                          grid.dtype), grid)
 
     @functools.cached_property
     def _run_jit(self):
-        @functools.partial(jax.jit, static_argnames=("iters",))
-        def run(grid, iters: int):
-            q, r = divmod(iters, self.sweeps)
-            def body(g, _):
-                return self._step(g), None
-            out, _ = jax.lax.scan(body, grid, None, length=q)
-            if r:
-                out = self._build_step(r)(out)
-            return out
-        return run
+        # Process-wide: a second engine with identical options gets the
+        # *same* jitted callable (warm XLA cache, zero retraces).
+        return _plan.runner(self.spec, self.backend, self.sweeps,
+                            _plan.canonical_tile_request(self.tile),
+                            self.interpret)
 
     def run(self, grid: jax.Array, iters: int = 1) -> jax.Array:
         """``iters`` total stencil applications (fused ``sweeps`` at a
-        time; any remainder runs as one narrower fused call)."""
+        time; any remainder runs as one narrower fused call whose plan
+        comes from the plan cache)."""
         return self._run_jit(grid, iters=iters)
 
     _INHERIT = object()   # tile sentinel: None is itself a legal tile value
@@ -147,7 +127,8 @@ class CasperEngine:
         overridden, so temporal blocking (deep halo exchange + fused
         shard-local sweeps) and the Pallas backend apply in the
         distributed path exactly as in :meth:`run`; ``iters`` decomposes
-        as ``q*sweeps + r`` the same way.
+        as ``q*sweeps + r`` the same way (both through the plan's
+        ``decompose``).
         """
         return distributed_stencil_fn(
             self.spec, mesh, grid_axes, iters,

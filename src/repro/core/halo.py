@@ -16,16 +16,24 @@ device-shard granularity.  When a neighbor's block is narrower than the
 deep halo, the exchange falls back to a multi-hop gather (``ppermute`` at
 distances 1..k), so slivers and tiny shards stay correct.
 
-Boundary modes (``spec.boundary``) shape the exchange at the grid edges:
+This module is a thin *executor* of plans lowered by
+:mod:`repro.core.plan`: ``distributed_stencil_fn`` lowers one
+:class:`~repro.core.plan.ExecutionPlan` per (spec, global shape, dtype,
+backend, sweeps, tile, mesh fingerprint) — through the process-wide plan
+cache, so repeat meshes/shapes re-lower nothing — and
+:func:`execute_plan` runs one fused step from it.  The boundary-mode →
+exchange-strategy decision (wrap-ring / zero-fill / local edge-fixup)
+and the shard-shape tile autotune now live in ``plan.lower``, not here:
 
-* ``zero`` falls out of `ppermute` semantics for free — devices without a
-  source in the permutation receive zeros;
-* ``periodic`` turns each hop into a wrap-around *ring* permutation
-  (``(i, (i+j) mod n)`` for every device), so grid-edge devices receive
-  the opposite edge of the grid instead of fill;
-* ``constant(c)`` / ``reflect`` keep the zero-filled exchange and then fix
-  the out-of-grid ghost region up locally — a constant fill, or a mirror
-  gather whose source provably lies inside the already-exchanged block.
+* ``zero-fill`` falls out of `ppermute` semantics for free — devices
+  without a source in the permutation receive zeros;
+* ``wrap-ring`` (periodic) turns each hop into a wrap-around *ring*
+  permutation (``(i, (i+j) mod n)`` for every device), so grid-edge
+  devices receive the opposite edge of the grid instead of fill;
+* ``edge-fixup`` (constant(c) / reflect) keeps the zero-filled exchange
+  and then fixes the out-of-grid ghost region up locally — a constant
+  fill, or a mirror gather whose source provably lies inside the
+  already-exchanged block.
 
 Between fused sweeps, the shard-local compute restores intermediates that
 fall outside the *global* grid to the mode's boundary extension
@@ -44,15 +52,17 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from . import plan as _plan
 from . import ref as _ref
 from .stencil import StencilSpec
 
 
 def exchange_halo_1axis(x: jax.Array, axis: int, halo: int,
                         axis_name: str, *, mode: str = "zero",
-                        value: float = 0.0) -> jax.Array:
+                        value: float = 0.0,
+                        strategy: str | None = None) -> jax.Array:
     """Pad dim ``axis`` of the local block with ``halo`` neighbor elements
-    per side, serving grid edges per the boundary ``mode``.
+    per side, serving grid edges per the exchange ``strategy``.
 
     Sends this block's right edge to the right neighbor (it becomes that
     neighbor's left halo) and vice versa.  ``halo`` may exceed the local
@@ -60,24 +70,17 @@ def exchange_halo_1axis(x: jax.Array, axis: int, halo: int,
     ``ceil(halo/size)`` hops away — one ``ppermute`` per hop per
     direction, the multi-hop fallback for deep halos on narrow shards.
 
-    Grid edges per mode:
-
-    * ``zero`` — boundary devices receive zeros (devices without a source
-      in a permutation receive zeros: the zero boundary for free);
-    * ``periodic`` — each hop becomes a wrap-around ring permutation
-      ``(i, (i+j) mod n)``, so the assembled halo is exactly the wrap
-      (``numpy mode="wrap"``) extension of the global grid, at any depth
-      (a hop distance ≥ n simply wraps more than once);
-    * ``constant`` — zero-filled exchange, then out-of-grid coordinates
-      are overwritten with ``value``;
-    * ``reflect`` — zero-filled exchange, then out-of-grid coordinates
-      are overwritten by a mirror gather: the fold of a ghost coordinate
-      always lands inside this device's already-exchanged block (see
-      docs/boundaries.md for the in-window argument), so no extra
-      communication is needed.
+    ``strategy`` is one of :data:`repro.core.plan.EXCHANGE_STRATEGIES`
+    (``zero-fill`` / ``wrap-ring`` / ``edge-fixup``); when ``None`` it is
+    resolved from the boundary ``mode`` by the one decision function,
+    :func:`repro.core.plan.exchange_strategy_for` — this module only
+    executes the choice.  ``mode``/``value`` still parameterize the
+    edge-fixup mechanics (constant fill vs reflect mirror).
     """
     if halo == 0:
         return x
+    if strategy is None:
+        strategy = _plan.exchange_strategy_for(mode)
     n = lax.psum(1, axis_name)  # static mesh size along the axis
     size = x.shape[axis]
     hops = -(-halo // size)
@@ -88,7 +91,7 @@ def exchange_halo_1axis(x: jax.Array, axis: int, halo: int,
         w = min(size, halo - (j - 1) * size)
         right_edge = lax.slice_in_dim(x, size - w, size, axis=axis)
         left_edge = lax.slice_in_dim(x, 0, w, axis=axis)
-        if mode == "periodic":          # wrap-around ring, every device
+        if strategy == "wrap-ring":     # wrap-around ring, every device
             from_left.append(lax.ppermute(
                 right_edge, axis_name,
                 [(i, (i + j) % n) for i in range(n)]))
@@ -106,7 +109,7 @@ def exchange_halo_1axis(x: jax.Array, axis: int, halo: int,
             left_edge, axis_name, [(i, i - j) for i in range(j, n)]))
     # left halo runs farthest-to-nearest neighbor, right halo the reverse.
     out = jnp.concatenate(from_left[::-1] + [x] + from_right, axis=axis)
-    if mode in ("constant", "reflect"):
+    if strategy == "edge-fixup":
         out = _fix_edge_ghosts_1axis(out, axis, halo, size, axis_name, n,
                                      mode, value)
     return out
@@ -131,22 +134,24 @@ def _fix_edge_ghosts_1axis(padded: jax.Array, axis: int, halo: int,
     return _ref.reflect_gather(padded, axis, start - halo, grid_n, ext)
 
 
-def _local_multisweep(spec: StencilSpec, sharded_axes: Sequence[str | None],
-                      sweeps: int, backend: str,
-                      tile, interpret: bool, x: jax.Array) -> jax.Array:
+def _local_multisweep(plan: "_plan.ExecutionPlan", x: jax.Array) -> jax.Array:
     """Shard-local fused compute: widen the block by ``sweeps*halo`` once
-    (exchange on sharded dims, boundary-pad elsewhere), then apply all
-    ``sweeps`` stencil applications on the widened block."""
-    halo = spec.halo
-    mode, value = spec.boundary_mode, spec.boundary_value
-    deep = tuple(sweeps * h for h in halo)
+    (exchange on sharded dims per the plan's per-axis strategy,
+    boundary-pad elsewhere), then apply all ``sweeps`` stencil
+    applications on the widened block.  Every decision — exchange
+    strategy, tile, halo depth — was resolved at lowering time."""
+    spec = plan.spec
+    halo = plan.halo
+    mode, value = plan.boundary_mode, plan.boundary_value
+    deep = plan.deep_halo
     padded = x
     origin, grid_shape = [], []
     for d in range(spec.ndim):
-        name = sharded_axes[d] if d < len(sharded_axes) else None
+        name = plan.grid_axes[d] if d < len(plan.grid_axes) else None
         if name is not None:
             padded = exchange_halo_1axis(padded, d, deep[d], name,
-                                         mode=mode, value=value)
+                                         mode=mode, value=value,
+                                         strategy=plan.exchange[d])
             origin.append(lax.axis_index(name) * x.shape[d])
             grid_shape.append(x.shape[d] * lax.psum(1, name))
         else:
@@ -155,21 +160,31 @@ def _local_multisweep(spec: StencilSpec, sharded_axes: Sequence[str | None],
             padded = _ref.pad_boundary(padded, pad, mode, value)
             origin.append(0)
             grid_shape.append(x.shape[d])
-    if backend == "pallas":
+    if plan.backend == "pallas":
         from repro.kernels import engine as keng  # lazy: optional dep
-        if tile == "auto":
-            from repro.kernels import tune
-            tile = tune.autotune(spec, x.shape, sweeps=sweeps,
-                                 itemsize=x.dtype.itemsize).tile
         return keng.stencil_window_sweep(
             spec, padded, x.shape, origin, grid_shape,
-            tile=tile, sweeps=sweeps, interpret=interpret)
-    if backend != "ref":
-        raise ValueError(f"unknown backend {backend!r}")
+            tile=plan.tile, sweeps=plan.sweeps, interpret=plan.interpret)
     return _ref.masked_window_sweeps(
-        padded, spec.taps, halo, x.shape, sweeps, origin, grid_shape,
+        padded, spec.taps, halo, x.shape, plan.sweeps, origin, grid_shape,
         x.dtype, mode=mode, value=value,
         structure=spec.structure).astype(x.dtype)
+
+
+def execute_plan(plan: "_plan.ExecutionPlan", x: jax.Array) -> jax.Array:
+    """One fused distributed step of a lowered plan: deep halo exchange +
+    ``plan.sweeps`` shard-local applications, as a ``shard_map`` over the
+    plan's mesh applied to the global array."""
+    if not plan.is_distributed:
+        raise ValueError("plan has no mesh; use the single-device executors")
+    pspec = P(*plan.grid_axes)
+    local = functools.partial(_local_multisweep, plan)
+    # pallas_call has no shard_map replication rule; the local fn is
+    # purely per-shard, so disabling the check is sound there.
+    step = shard_map(local, mesh=plan.mesh, in_specs=(pspec,),
+                     out_specs=pspec,
+                     check_rep=(plan.backend != "pallas"))
+    return step(x)
 
 
 def distributed_stencil_fn(
@@ -193,15 +208,16 @@ def distributed_stencil_fn(
     step exchanges one ``t*halo``-deep halo (multi-hop when a shard is
     narrower than the deep halo) and runs ``t`` applications locally, so
     collective launches drop ~t× at roughly equal wire volume.  ``iters``
-    decomposes as ``q*t + r`` exactly like ``CasperEngine.run`` — ``q``
-    fused steps plus one narrower remainder step.  ``backend`` selects
-    the shard-local compute: the ``ref`` einsum path or the Pallas kernel
-    (``tile``/``tile="auto"`` as in the single-device engine,
-    ``interpret=None`` auto-detects: interpret mode on CPU, compiled on
-    TPU).  Both backends dispatch per-application compute on
-    ``spec.structure`` through the shared masked multi-sweep core, so
-    structure-specialized specs stay f64 bit-identical across the
-    distributed path too.
+    decomposes as ``q*t + r`` via ``plan.decompose`` exactly like
+    ``CasperEngine.run`` — ``q`` fused steps plus one narrower remainder
+    step whose plan comes from the plan cache.  ``backend`` selects the
+    shard-local compute: the ``ref`` einsum path or the Pallas kernel
+    (``tile``/``tile="auto"`` autotunes on the *shard* shape inside
+    ``plan.lower``; ``interpret=None`` auto-detects: interpret mode on
+    CPU, compiled on TPU).  Both backends dispatch per-application
+    compute on the factorization recorded on the plan through the shared
+    masked multi-sweep core, so structure-specialized specs stay f64
+    bit-identical across the distributed path too.
     """
     if len(grid_axes) != spec.ndim:
         raise ValueError("grid_axes must have one entry per grid dim")
@@ -209,28 +225,16 @@ def distributed_stencil_fn(
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
     if iters < 0:
         raise ValueError(f"iters must be >= 0, got {iters}")
+    if backend not in ("ref", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
     pspec = P(*grid_axes)
     axes = tuple(grid_axes)
 
-    def make_step(t: int):
-        local = functools.partial(_local_multisweep, spec, axes, t,
-                                  backend, tile, interpret)
-        # pallas_call has no shard_map replication rule; the local fn is
-        # purely per-shard, so disabling the check is sound there.
-        return shard_map(local, mesh=mesh, in_specs=(pspec,),
-                         out_specs=pspec, check_rep=(backend != "pallas"))
-
-    q, r = divmod(iters, sweeps)
-
     def run(x):
-        if q:
-            step = make_step(sweeps)
-            def body(g, _):
-                return step(g), None
-            x, _ = lax.scan(body, x, None, length=q)
-        if r:
-            x = make_step(r)(x)
-        return x
+        plan = _plan.lower(spec, x.shape, x.dtype, backend=backend,
+                           sweeps=sweeps, tile=tile, mesh=mesh,
+                           grid_axes=axes, interpret=interpret)
+        return _plan.run_plan(plan, x, iters)
 
     in_sh = NamedSharding(mesh, pspec)
     return jax.jit(run, in_shardings=(in_sh,), out_shardings=in_sh)

@@ -1,0 +1,554 @@
+"""ExecutionPlan: the one spec→plan lowering pipeline feeding every backend.
+
+Casper's central separation — the host assembles *what* a stencil
+computes once, the memory system decides *how* to execute it at peak
+bandwidth — used to be smeared across five modules: each execution layer
+(jnp/numpy oracles, Pallas engine, distributed halo path, SPU VM)
+re-derived the structure factorization, the boundary-ghost strategy, the
+tile choice and the ``iters = q*sweeps + r`` decomposition for itself.
+This module is now the single home of those decisions:
+
+``lower(spec, shape, dtype, *, backend, sweeps, tile, mesh, grid_axes,
+interpret)`` resolves, once, everything a backend needs —
+
+* the tap **factorization** (:func:`repro.core.stencil.factor_taps`);
+* the **boundary-ghost strategy**: per-sweep ``pad_boundary`` for the
+  oracles (``"pad"``), in-kernel ghost materialization vs the padded
+  window fallback for Pallas (:func:`ghost_strategy_for`), the
+  wrap-ring / zero-fill / local edge-fixup exchange per sharded axis for
+  the distributed path (:func:`exchange_strategy_for`), and the VM's
+  per-access ghost service (``"stream"``);
+* the **tile** (``"auto"`` runs the :mod:`repro.kernels.tune` autotuner
+  here and nowhere else; for distributed plans it tunes on the *shard*
+  shape);
+* the **iteration decomposition** (``plan.decompose(iters)``) and the
+  **remainder plan** (``plan.remainder(r)`` — lowered through the same
+  cache, so remainders never re-autotune at trace time);
+* the halo depth (``plan.deep_halo = sweeps * halo``) and the assembled
+  SPU :class:`~repro.core.isa.Program`.
+
+The backends are thin executors of the resulting plan —
+``repro.core.ref.execute_plan`` (oracle), ``repro.kernels.engine
+.execute_plan`` (Pallas), ``repro.core.halo.execute_plan`` (shard_map)
+and ``repro.core.vm.execute_plan`` (SPU VM) — which preserves the f64
+bit-identity matrix *by construction*: the pinned accumulation order
+(``ref.tap_sum`` walking the factorization recorded on the plan) lives
+in exactly one place.
+
+Lowering goes through a **process-wide LRU plan cache**
+(:data:`PLAN_CACHE`) keyed on ``(spec, shape, dtype, backend, sweeps,
+tile request, interpret, mesh fingerprint)`` — the spec key includes
+boundary and structure.  Constructing a second engine, or serving a
+repeat shape, therefore costs zero re-lowers and zero autotune sweeps;
+the cache exposes hit/miss/lower/autotune counters so tests and the
+serving front-end (:mod:`repro.serve.stencil`) can pin that claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from collections import OrderedDict
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .isa import Program, assemble
+from .stencil import Factorization, StencilSpec, factor_taps
+
+Backend = Literal["ref", "pallas", "vm"]
+
+#: The execution layers a plan can target.  ``"ref"`` is the jnp oracle
+#: chain (the numpy oracle shares its pinned order), ``"pallas"`` the
+#: fused TPU kernel, ``"vm"`` the software SPU.  A plan with a mesh
+#: fingerprint executes through the distributed halo path with
+#: shard-local ``ref``/``pallas`` compute.
+BACKENDS = ("ref", "pallas", "vm")
+
+#: Boundary-ghost strategies a plan can select (the *decision* lives
+#: here; the mechanics stay with their backend):
+#:
+#: * ``"pad"``          — oracle path: re-extend with ``ref.pad_boundary``
+#:                        before every application;
+#: * ``"pad-free"``     — Pallas: clamped element BlockSpec on the
+#:                        unpadded grid + in-kernel ghost materialization;
+#: * ``"padded-window"`` — Pallas fallback: fetch windows from one
+#:                        ``pad_boundary`` copy (tiny grids; periodic
+#:                        grids past the whole-grid VMEM budget; and the
+#:                        distributed shard-local kernel, whose window is
+#:                        the exchanged halo);
+#: * ``"stream"``       — SPU VM: ghost stream elements served per mode
+#:                        at access time.
+GHOST_STRATEGIES = ("pad", "pad-free", "padded-window", "stream")
+
+#: Halo-exchange strategies for one sharded axis of a distributed plan:
+#: ``"zero-fill"`` (plain ``ppermute``; edge devices receive zeros),
+#: ``"wrap-ring"`` (periodic: every hop is a wrap-around ring
+#: permutation) and ``"edge-fixup"`` (zero-filled exchange, then the
+#: out-of-grid ghosts are overwritten locally with the constant fill or
+#: the reflect mirror).
+EXCHANGE_STRATEGIES = ("zero-fill", "wrap-ring", "edge-fixup")
+
+# Default output tiles per rank: innermost dim 128-aligned for the VPU
+# lane width, sublane-sized second-minor (see /opt guides; validated in
+# interpret mode on CPU).  This is the lowering-time default when no
+# tile is requested; ``repro.kernels.engine`` re-exports it.
+DEFAULT_TILES: dict[int, tuple[int, ...]] = {
+    1: (512,),
+    2: (32, 256),
+    3: (4, 16, 128),
+}
+
+
+def default_tile(ndim: int) -> tuple[int, ...]:
+    return DEFAULT_TILES[ndim]
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → auto-detect: interpret mode exactly when the default
+    backend is CPU (Pallas TPU kernels need real hardware; CPU needs the
+    interpreter).  An explicit bool is passed through.  This is the one
+    encoding of the policy — ``repro.core.engine`` and
+    ``repro.kernels.engine`` re-export it."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def normalize_tile(spec: StencilSpec,
+                   tile: Sequence[int] | int | None) -> tuple[int, ...]:
+    """Default / int-promote / validate a tile for ``spec``."""
+    if tile is None:
+        tile = DEFAULT_TILES[spec.ndim]
+    elif isinstance(tile, int):
+        tile = (tile,)
+    tile = tuple(int(t) for t in tile)
+    if len(tile) != spec.ndim:
+        raise ValueError(f"tile rank {len(tile)} != spec ndim {spec.ndim}")
+    return tile
+
+
+# ---------------------------------------------------------------------------
+# The decisions (single home; backends only consume the answers)
+# ---------------------------------------------------------------------------
+def exchange_strategy_for(mode: str) -> str:
+    """Halo-exchange strategy for one sharded axis under boundary
+    ``mode`` — previously an ad-hoc branch inside ``core.halo``:
+    ``periodic`` rides a wrap-around ring permutation at equal launch
+    count; ``constant``/``reflect`` keep the zero-filled exchange and fix
+    the out-of-grid ghosts up locally; ``zero`` falls out of ``ppermute``
+    semantics for free."""
+    if mode == "periodic":
+        return "wrap-ring"
+    if mode in ("constant", "reflect"):
+        return "edge-fixup"
+    if mode != "zero":
+        raise ValueError(f"unknown boundary mode {mode!r}")
+    return "zero-fill"
+
+
+def ghost_strategy_for(spec: StencilSpec, shape: Sequence[int],
+                       itemsize: int, sweeps: int,
+                       tile: Sequence[int] | int | None,
+                       *, periodic_budget_bytes: int | None = None) -> str:
+    """Pad-free vs padded-window decision for the single-device Pallas
+    backend — previously an ad-hoc branch inside ``kernels.engine``.
+
+    The pad-free kernel's clamped fetch needs ``window <= grid`` per dim
+    (tiny grids fall back), and its periodic wrap gather blocks the
+    *whole* grid (the far edge must be addressable), which is only sane
+    while the grid sits comfortably inside VMEM next to the working set
+    (``periodic_budget_bytes``; the caller passes its configured budget —
+    ``kernels.engine._PERIODIC_WHOLE_GRID_BYTES`` by default).  Both
+    fallbacks produce bitwise-identical results through the padded
+    window path.
+    """
+    import math
+    tile = normalize_tile(spec, tile)
+    shape = tuple(shape)
+    wide = tuple(sweeps * h for h in spec.halo)
+    win = tuple(t + 2 * w for t, w in zip(tile, wide))
+    if spec.boundary_mode == "periodic":
+        if periodic_budget_bytes is None:
+            from repro.kernels import engine as _keng  # lazy: optional dep
+            periodic_budget_bytes = _keng._PERIODIC_WHOLE_GRID_BYTES
+        grid_bytes = math.prod(shape) * itemsize
+        return ("padded-window" if grid_bytes > periodic_budget_bytes
+                else "pad-free")
+    if any(w > n for w, n in zip(win, shape)):
+        return "padded-window"
+    return "pad-free"
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything a backend needs to execute one fused block of
+    ``sweeps`` stencil applications — resolved once at lowering time.
+
+    Plans are frozen, hashable (they key the process-wide jitted-runner
+    caches) and produced only by :func:`lower`, which memoizes them in
+    :data:`PLAN_CACHE`.
+    """
+
+    spec: StencilSpec
+    shape: tuple[int, ...]              # global grid shape
+    dtype: str                          # canonical dtype name
+    backend: str                        # "ref" | "pallas" | "vm"
+    sweeps: int
+    interpret: bool                     # resolved (pallas interpret mode)
+    tile: tuple[int, ...] | None        # resolved output tile (pallas only)
+    tile_request: object                # what was asked: "auto"/tuple/None
+    ghost_strategy: str                 # one of GHOST_STRATEGIES
+    halo: tuple[int, ...]
+    deep_halo: tuple[int, ...]          # sweeps * halo, per dim
+    factorization: Factorization        # the pinned f64 compute order
+    boundary_mode: str
+    boundary_value: float
+    program: Program                    # assembled SPU program (ISA)
+    mesh: object | None = None          # jax Mesh for distributed plans
+    grid_axes: tuple | None = None      # mesh axis name per grid dim
+    exchange: tuple | None = None       # per-dim exchange strategy / None
+    shard_shape: tuple[int, ...] | None = None
+    mesh_fingerprint: tuple | None = None
+
+    @property
+    def stream_plan(self):
+        """The assembled stream plan (``program.plan``)."""
+        return self.program.plan
+
+    @property
+    def is_distributed(self) -> bool:
+        return self.mesh is not None
+
+    def decompose(self, iters: int) -> tuple[int, int]:
+        """``iters = q * sweeps + r`` — the one statement of the fused
+        iteration decomposition every runner uses."""
+        if iters < 0:
+            raise ValueError(f"iters must be >= 0, got {iters}")
+        return divmod(iters, self.sweeps)
+
+    def remainder(self, r: int) -> "ExecutionPlan":
+        """The plan for a narrower fused block of ``r`` sweeps — same
+        spec/shape/backend/tile request, lowered through the cache (so a
+        remainder never re-runs the autotuner once any engine has seen
+        it)."""
+        return lower(self.spec, self.shape, self.dtype,
+                     backend=self.backend, sweeps=r, tile=self.tile_request,
+                     mesh=self.mesh, grid_axes=self.grid_axes,
+                     interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# The process-wide plan cache
+# ---------------------------------------------------------------------------
+class PlanCache:
+    """LRU cache of lowered plans with observable counters.
+
+    ``hits``/``misses`` count key lookups, ``lowers`` the plan
+    constructions actually performed (== misses while the cache is large
+    enough), ``autotune_calls`` the lowering-initiated tile autotunes,
+    ``evictions`` the LRU drops.  ``stats()`` snapshots everything; the
+    serving front-end reports the per-batch delta as its cache-hit rate.
+    """
+
+    def __init__(self, maxsize: int = 512):
+        self.maxsize = maxsize
+        self._store: OrderedDict = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.lowers = 0
+        self.autotune_calls = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key):
+        with self._lock:
+            if key in self._store:
+                self._store.move_to_end(key)
+                self.hits += 1
+                return self._store[key]
+            self.misses += 1
+            return None
+
+    def put(self, key, plan) -> None:
+        with self._lock:
+            self._store[key] = plan
+            self._store.move_to_end(key)
+            while len(self._store) > self.maxsize:
+                self._store.popitem(last=False)
+                self.evictions += 1
+
+    def get_or_lower(self, key, factory):
+        """Atomic miss → lower → insert: the whole sequence (including
+        the counter updates and any autotune the factory runs) holds the
+        cache lock, so two threads racing on the same novel key cannot
+        double-lower or lose counter increments (the RLock keeps nested
+        lowering from the factory safe)."""
+        with self._lock:
+            hit = self.get(key)
+            if hit is not None:
+                return hit
+            self.lowers += 1
+            plan = factory()
+            self.put(key, plan)
+            return plan
+
+    def keys(self):
+        """Current keys, least- to most-recently used."""
+        with self._lock:
+            return list(self._store)
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "size": len(self._store),
+                "maxsize": self.maxsize,
+                "hits": self.hits,
+                "misses": self.misses,
+                "lowers": self.lowers,
+                "autotune_calls": self.autotune_calls,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+            self.hits = self.misses = self.lowers = 0
+            self.autotune_calls = self.evictions = 0
+
+
+#: The process-wide plan cache: one per process, shared by every engine,
+#: every ``distributed_stencil_fn`` and the serving front-end.
+PLAN_CACHE = PlanCache()
+
+
+def plan_cache_stats() -> dict:
+    return PLAN_CACHE.stats()
+
+
+def canonical_tile_request(tile) -> object:
+    """Hashable canonical form of a tile request: ``"auto"``, ``None``
+    or a tuple of ints."""
+    if tile is None or tile == "auto":
+        return tile
+    if isinstance(tile, int):
+        return (int(tile),)
+    return tuple(int(t) for t in tile)
+
+
+def mesh_fingerprint(mesh, grid_axes) -> tuple | None:
+    """Hashable identity of a mesh placement: axis names, per-axis
+    sizes, the exact device assignment (ids in mesh order — two meshes
+    over different devices, or the same devices in a different order,
+    must NOT share plans: the plan pins its ``Mesh`` object) and the
+    grid-dim → axis assignment."""
+    if mesh is None:
+        return None
+    devices = tuple(d.id for d in mesh.devices.flat)
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape), devices,
+            tuple(grid_axes) if grid_axes is not None else None)
+
+
+def plan_key(spec: StencilSpec, shape, dtype, backend: str, sweeps: int,
+             tile, interpret: bool, mesh=None, grid_axes=None) -> tuple:
+    """The plan-cache key.  Includes everything lowering depends on —
+    the full spec (boundary + structure participate via spec equality),
+    shape, dtype, backend, sweeps, the tile *request* and the mesh
+    fingerprint."""
+    return (spec, tuple(int(n) for n in shape), jnp.dtype(dtype).name,
+            backend, int(sweeps), canonical_tile_request(tile),
+            bool(interpret), mesh_fingerprint(mesh, grid_axes))
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+def lower(spec: StencilSpec, shape: Sequence[int], dtype, *,
+          backend: Backend = "ref", sweeps: int = 1,
+          tile: Sequence[int] | int | Literal["auto"] | None = None,
+          mesh=None, grid_axes: Sequence[str | None] | None = None,
+          interpret: bool | None = None) -> ExecutionPlan:
+    """Lower ``(spec, shape, dtype, …)`` to an :class:`ExecutionPlan`,
+    through the process-wide :data:`PLAN_CACHE`.
+
+    Safe to call inside a jit trace: every input is static.  ``mesh`` +
+    ``grid_axes`` request a distributed plan (tile autotuning then runs
+    on the shard shape and per-axis exchange strategies are resolved).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    shape = tuple(int(n) for n in shape)
+    if len(shape) != spec.ndim:
+        raise ValueError(f"shape rank {len(shape)} != spec ndim {spec.ndim}")
+    if (mesh is None) != (grid_axes is None):
+        raise ValueError("mesh and grid_axes must be passed together")
+    if grid_axes is not None and len(grid_axes) != spec.ndim:
+        raise ValueError("grid_axes must have one entry per grid dim")
+    interp = resolve_interpret(interpret)
+    tile_req = canonical_tile_request(tile)
+    axes = tuple(grid_axes) if grid_axes is not None else None
+
+    key = plan_key(spec, shape, dtype, backend, sweeps, tile_req, interp,
+                   mesh, axes)
+    return PLAN_CACHE.get_or_lower(
+        key, lambda: _lower_uncached(spec, shape, jnp.dtype(dtype), backend,
+                                     sweeps, tile_req, mesh, axes, interp,
+                                     key[-1]))
+
+
+def _shard_shape(shape, mesh, axes) -> tuple[int, ...]:
+    out = []
+    for d, n in enumerate(shape):
+        name = axes[d] if d < len(axes) else None
+        size = mesh.shape[name] if name is not None else 1
+        if n % size:
+            raise ValueError(
+                f"grid dim {d} ({n}) not divisible by mesh axis "
+                f"{name!r} ({size})")
+        out.append(n // size)
+    return tuple(out)
+
+
+def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
+                    axes, interp, fingerprint) -> ExecutionPlan:
+    # counters (lowers, autotune_calls) update under the cache lock:
+    # this only runs from PlanCache.get_or_lower
+    halo = spec.halo
+    deep = tuple(sweeps * h for h in halo)
+    mode, value = spec.boundary_mode, spec.boundary_value
+
+    shard_shape = exchange = None
+    if mesh is not None:
+        shard_shape = _shard_shape(shape, mesh, axes)
+        exchange = tuple(
+            exchange_strategy_for(mode) if axes[d] is not None else None
+            for d in range(spec.ndim))
+
+    resolved_tile = None
+    ghost = "pad"                               # oracle default
+    if backend == "pallas":
+        tune_shape = shard_shape if shard_shape is not None else shape
+        if tile_req == "auto":
+            from repro.kernels import tune      # lazy: optional dep
+            PLAN_CACHE.autotune_calls += 1
+            resolved_tile = tune.autotune(spec, tune_shape, sweeps=sweeps,
+                                          itemsize=dtype.itemsize).tile
+        else:
+            resolved_tile = normalize_tile(spec, tile_req)
+        if mesh is not None:
+            # the shard-local kernel always runs on the exchanged
+            # (already ghost-extended) window
+            ghost = "padded-window"
+        else:
+            ghost = ghost_strategy_for(spec, shape, dtype.itemsize, sweeps,
+                                       resolved_tile)
+    elif backend == "vm":
+        ghost = "stream"
+
+    return ExecutionPlan(
+        spec=spec, shape=shape, dtype=dtype.name, backend=backend,
+        sweeps=sweeps, interpret=interp, tile=resolved_tile,
+        tile_request=tile_req, ghost_strategy=ghost, halo=halo,
+        deep_halo=deep, factorization=factor_taps(spec),
+        boundary_mode=mode, boundary_value=value, program=assemble(spec),
+        mesh=mesh, grid_axes=axes, exchange=exchange,
+        shard_shape=shard_shape, mesh_fingerprint=fingerprint)
+
+
+# ---------------------------------------------------------------------------
+# Execution: thin dispatch to the backend executors
+# ---------------------------------------------------------------------------
+def execute(plan: ExecutionPlan, grid):
+    """One fused block — ``plan.sweeps`` stencil applications — on the
+    plan's backend.  Traceable under jit/vmap (except ``"vm"``, which is
+    numpy)."""
+    if plan.is_distributed:
+        from . import halo as _halo
+        return _halo.execute_plan(plan, grid)
+    if plan.backend == "ref":
+        from . import ref as _ref
+        return _ref.execute_plan(plan, grid)
+    if plan.backend == "pallas":
+        from repro.kernels import engine as _keng   # lazy: optional dep
+        return _keng.execute_plan(plan, grid)
+    if plan.backend == "vm":
+        from . import vm as _vm
+        return _vm.execute_plan(plan, grid)[0]
+    raise ValueError(f"unknown backend {plan.backend!r}")
+
+
+def run_plan(plan: ExecutionPlan, grid, iters: int):
+    """``iters`` total applications under ``plan``: ``q`` fused blocks
+    rolled into one ``lax.scan`` plus one narrower remainder block whose
+    plan comes from the cache — the one statement of the fused iteration
+    loop shared by the engine, the distributed path and the serving
+    front-end."""
+    q, r = plan.decompose(iters)
+    out = grid
+    if q:
+        def body(g, _):
+            return execute(plan, g), None
+        out, _ = jax.lax.scan(body, out, None, length=q)
+    if r:
+        out = execute(plan.remainder(r), out)
+    return out
+
+
+def _grid_shape_for(spec: StencilSpec, grid) -> tuple[int, ...]:
+    """The per-grid shape to lower for: ``grid`` may carry one leading
+    batch dimension (the Pallas engine vmaps over it)."""
+    if grid.ndim == spec.ndim + 1:
+        return tuple(grid.shape[1:])
+    return tuple(grid.shape)
+
+
+@functools.lru_cache(maxsize=512)
+def runner(spec: StencilSpec, backend: str, sweeps: int, tile_req,
+           interpret: bool):
+    """Process-wide jitted ``run(grid, iters)`` for an engine
+    configuration.  Keyed on the canonical lowering inputs, so a second
+    :class:`~repro.core.engine.CasperEngine` with identical options
+    reuses the *same* jitted callable — zero retraces, zero re-lowers,
+    zero autotune sweeps (the plan-cache counters pin this).
+    """
+    @functools.partial(jax.jit, static_argnames=("iters",))
+    def run(grid, iters: int):
+        plan = lower(spec, _grid_shape_for(spec, grid), grid.dtype,
+                     backend=backend, sweeps=sweeps, tile=tile_req,
+                     interpret=interpret)
+        return run_plan(plan, grid, iters)
+    return run
+
+
+@functools.lru_cache(maxsize=512)
+def batch_runner(spec: StencilSpec, backend: str, sweeps: int, tile_req,
+                 interpret: bool):
+    """Process-wide jitted ``run(grids, iters)`` over a stacked batch of
+    same-shaped grids: one plan lowered for the element shape, one
+    vmapped fused call for the whole bucket (the serving front-end's
+    execution primitive)."""
+    @functools.partial(jax.jit, static_argnames=("iters",))
+    def run(grids, iters: int):
+        plan = lower(spec, grids.shape[1:], grids.dtype, backend=backend,
+                     sweeps=sweeps, tile=tile_req, interpret=interpret)
+        return jax.vmap(lambda g: run_plan(plan, g, iters))(grids)
+    return run
+
+
+def runner_cache_stats() -> dict:
+    """Hit/miss counters of the jitted-runner caches (a runner-cache hit
+    means the second engine re-used an already-traced callable)."""
+    return {"runner": runner.cache_info()._asdict(),
+            "batch_runner": batch_runner.cache_info()._asdict()}

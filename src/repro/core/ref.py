@@ -269,6 +269,21 @@ def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
     return x
 
 
+def execute_plan(plan, grid: jax.Array) -> jax.Array:
+    """Thin ``ref``-backend executor of one lowered
+    :class:`~repro.core.plan.ExecutionPlan`: ``plan.sweeps`` chained
+    oracle applications (ghost strategy ``"pad"`` — re-extend via
+    :func:`pad_boundary` before every application, which is what
+    :func:`apply_stencil` does).  All decisions were made at lowering
+    time; this function only executes them."""
+    if plan.backend != "ref":
+        raise ValueError(f"not a ref plan: backend={plan.backend!r}")
+    out = grid
+    for _ in range(plan.sweeps):
+        out = apply_stencil(plan.spec, out)
+    return out
+
+
 def apply_stencil(spec: StencilSpec, grid: jax.Array) -> jax.Array:
     """``out[p] = sum_k c_k * in[p + off_k]``, one sweep; taps past the
     edge are served by ``spec.boundary`` (zero / constant / periodic /

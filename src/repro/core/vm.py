@@ -30,7 +30,7 @@ import dataclasses
 
 import numpy as np
 
-from .isa import Program, assemble
+from .isa import Program
 from .ref import periodic_index, reflect_index
 from .stencil import StencilSpec, parse_boundary
 
@@ -117,8 +117,23 @@ class SpuVM:
         return g
 
 
+def execute_plan(plan, grid: np.ndarray,
+                 iters: int | None = None) -> tuple[np.ndarray, SpuCounters]:
+    """Thin SPU-VM executor of one lowered
+    :class:`~repro.core.plan.ExecutionPlan`: runs the plan's assembled
+    :class:`~repro.core.isa.Program` for ``iters`` (default
+    ``plan.sweeps``) applications, serving out-of-grid stream elements
+    per the plan's boundary mode (ghost strategy ``"stream"``)."""
+    if plan.backend != "vm":
+        raise ValueError(f"not a vm plan: backend={plan.backend!r}")
+    vm = SpuVM(plan.program)
+    out = vm.run_iterations(np.asarray(grid),
+                            plan.sweeps if iters is None else iters)
+    return out, vm.counters
+
+
 def run_program(spec: StencilSpec, grid: np.ndarray,
                 iters: int = 1) -> tuple[np.ndarray, SpuCounters]:
-    vm = SpuVM(assemble(spec))
-    out = vm.run_iterations(grid, iters)
-    return out, vm.counters
+    from .plan import lower   # local: plan lazily imports executors
+    plan = lower(spec, grid.shape, grid.dtype, backend="vm")
+    return execute_plan(plan, grid, iters)

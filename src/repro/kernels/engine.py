@@ -75,45 +75,27 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import plan as _plan
 from repro.core import ref as _ref
 from repro.core import perfmodel as _pm
-from repro.core.engine import resolve_interpret  # canonical auto-detect
+from repro.core.plan import resolve_interpret  # canonical auto-detect
 from repro.core.stencil import StencilSpec, factor_taps
 
-# Default output tiles per rank: innermost dim 128-aligned for the VPU
-# lane width, sublane-sized second-minor (see /opt guides; validated in
-# interpret mode on CPU).
-DEFAULT_TILES: dict[int, tuple[int, ...]] = {
-    1: (512,),
-    2: (32, 256),
-    3: (4, 16, 128),
-}
+# Tile defaulting/validation is a lowering decision and lives in
+# repro.core.plan; re-exported here for the existing call sites.
+DEFAULT_TILES = _plan.DEFAULT_TILES
+default_tile = _plan.default_tile
+_normalize_tile = _plan.normalize_tile
 
 # The pad-free periodic path makes the whole (unpadded) grid the input
 # block — the wrap gather needs the far edge — which is only sane while
 # the grid comfortably fits the VMEM working set next to the window and
 # intermediates; larger periodic grids keep the wrap-padded fallback
 # (window-sized fetches, matching the hbm_traffic/pallas_tile_cost
-# window model).
+# window model).  The *decision* consuming this budget is
+# ``repro.core.plan.ghost_strategy_for``; this module attribute remains
+# the configurable knob (read at call time, so tests can patch it).
 _PERIODIC_WHOLE_GRID_BYTES = _pm.TPU_VMEM_BYTES // 4
-
-
-def default_tile(ndim: int) -> tuple[int, ...]:
-    return DEFAULT_TILES[ndim]
-
-
-def _normalize_tile(spec: StencilSpec,
-                    tile: Sequence[int] | int | None) -> tuple[int, ...]:
-    """Default/int-promote/validate a tile for ``spec`` (shared by the
-    pad-free and window entry points)."""
-    if tile is None:
-        tile = DEFAULT_TILES[spec.ndim]
-    elif isinstance(tile, int):
-        tile = (tile,)
-    tile = tuple(int(t) for t in tile)
-    if len(tile) != spec.ndim:
-        raise ValueError(f"tile rank {len(tile)} != spec ndim {spec.ndim}")
-    return tile
 
 
 def element_blockspec(block_shape, index_map) -> pl.BlockSpec:
@@ -275,7 +257,8 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
 def stencil_sweep(spec: StencilSpec, grid: jax.Array,
                   tile: Sequence[int] | int | None = None,
                   sweeps: int = 1,
-                  interpret: bool | None = None) -> jax.Array:
+                  interpret: bool | None = None,
+                  strategy: str | None = None) -> jax.Array:
     """``sweeps`` fused applications of ``spec`` to ``grid`` under the
     spec's boundary mode, **pad-free**: the kernel fetches its window
     straight from the unpadded grid and materializes boundary ghosts
@@ -302,9 +285,15 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
     wide = tuple(sweeps * h for h in halo)
     win = tuple(t + 2 * w for t, w in zip(tile, wide))
     periodic = spec.boundary_mode == "periodic"
-    grid_bytes = math.prod(grid.shape) * grid.dtype.itemsize
-    if (periodic and grid_bytes > _PERIODIC_WHOLE_GRID_BYTES) or (
-            not periodic and any(w > n for w, n in zip(win, grid.shape))):
+    # The pad-free vs padded-window choice is a lowering decision:
+    # execute_plan passes the plan's recorded strategy; direct callers
+    # (no plan in hand) ask core.plan for the answer here (the budget
+    # knob stays a module attribute so it can be patched per test).
+    if strategy is None:
+        strategy = _plan.ghost_strategy_for(
+            spec, grid.shape, grid.dtype.itemsize, sweeps, tile,
+            periodic_budget_bytes=_PERIODIC_WHOLE_GRID_BYTES)
+    if strategy == "padded-window":
         # Padded fallback: the clamped fetch needs win <= N per dim
         # (tiny grids), and the periodic wrap gather needs the whole
         # grid as its block, which must stay well inside VMEM — beyond
@@ -353,7 +342,8 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
 def stencil_apply(spec: StencilSpec, grid: jax.Array,
                   tile: Sequence[int] | int | None = None,
                   sweeps: int = 1,
-                  interpret: bool | None = None) -> jax.Array:
+                  interpret: bool | None = None,
+                  strategy: str | None = None) -> jax.Array:
     """Rank-dispatching entry point with an optional leading batch dim.
 
     ``grid.ndim == spec.ndim``    → one grid;
@@ -363,14 +353,27 @@ def stencil_apply(spec: StencilSpec, grid: jax.Array,
     interpret = resolve_interpret(interpret)
     if grid.ndim == spec.ndim:
         return stencil_sweep(spec, grid, tile=tile, sweeps=sweeps,
-                             interpret=interpret)
+                             interpret=interpret, strategy=strategy)
     if grid.ndim == spec.ndim + 1:
         fn = functools.partial(stencil_sweep, spec, tile=tile, sweeps=sweeps,
-                               interpret=interpret)
+                               interpret=interpret, strategy=strategy)
         return jax.vmap(fn)(grid)
     raise ValueError(
         f"grid rank {grid.ndim} incompatible with spec ndim {spec.ndim} "
         f"(expected ndim or ndim+1 for a batched grid)")
+
+
+def execute_plan(plan, grid: jax.Array) -> jax.Array:
+    """Thin Pallas executor of one lowered
+    :class:`~repro.core.plan.ExecutionPlan`: one fused block of
+    ``plan.sweeps`` applications with the plan's resolved tile and
+    ghost strategy (an optional leading batch dim vmaps over one shared
+    kernel, exactly as :func:`stencil_apply`)."""
+    if plan.backend != "pallas":
+        raise ValueError(f"not a pallas plan: backend={plan.backend!r}")
+    return stencil_apply(plan.spec, grid, tile=plan.tile,
+                         sweeps=plan.sweeps, interpret=plan.interpret,
+                         strategy=plan.ghost_strategy)
 
 
 def run_sweeps(spec: StencilSpec, grid: jax.Array, iters: int,
@@ -379,23 +382,17 @@ def run_sweeps(spec: StencilSpec, grid: jax.Array, iters: int,
                interpret: bool | None = None) -> jax.Array:
     """``iters`` total applications, fused ``sweeps`` at a time.
 
-    Decomposes ``iters = q*sweeps + r``: ``q`` fused calls rolled into a
+    Lowers one plan (through the process-wide plan cache) and runs
+    ``plan.decompose(iters) = (q, r)``: ``q`` fused calls rolled into a
     single ``lax.scan`` (one traced/compiled step instead of ``q``
-    unrolled copies of the kernel graph) plus one remainder call, so any
-    ``iters`` is exact for any blocking factor.
+    unrolled copies of the kernel graph) plus one remainder call whose
+    narrower plan also comes from the cache, so any ``iters`` is exact
+    for any blocking factor.
     """
-    interpret = resolve_interpret(interpret)
-    q, r = divmod(iters, sweeps)
-    out = grid
-    if q:
-        def body(g, _):
-            return stencil_apply(spec, g, tile=tile, sweeps=sweeps,
-                                 interpret=interpret), None
-        out, _ = jax.lax.scan(body, out, None, length=q)
-    if r:
-        out = stencil_apply(spec, out, tile=tile, sweeps=r,
-                            interpret=interpret)
-    return out
+    plan = _plan.lower(spec, _plan._grid_shape_for(spec, grid), grid.dtype,
+                       backend="pallas", sweeps=sweeps, tile=tile,
+                       interpret=interpret)
+    return _plan.run_plan(plan, grid, iters)
 
 
 # ---------------------------------------------------------------------------

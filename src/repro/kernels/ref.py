@@ -1,30 +1,44 @@
-"""Pure-jnp oracles for every Pallas kernel in this package."""
+"""DEPRECATED pre-engine oracle shim module.
+
+Everything here moved with the ExecutionPlan refactor: the stencil
+oracle lives in :mod:`repro.core.ref` (``apply_stencil``), the
+windowed-attention oracle next to its kernel in
+:mod:`repro.kernels.swa` (``swa_ref``), and the plan-driven stencil
+entry points in :mod:`repro.kernels.engine`.  The old names keep working
+through the lazy aliases below but emit ``DeprecationWarning``
+(``tests/test_plan.py`` pins that they warn); import from the new homes
+instead.
+"""
 from __future__ import annotations
 
-import math
+import warnings
 
-import jax
-import jax.numpy as jnp
+_ALIASES = {
+    "stencil_ref": ("repro.core.ref.apply_stencil",
+                    lambda: __import__("repro.core.ref",
+                                       fromlist=["apply_stencil"]
+                                       ).apply_stencil),
+    "swa_ref": ("repro.kernels.swa.swa_ref",
+                lambda: __import__("repro.kernels.swa",
+                                   fromlist=["swa_ref"]).swa_ref),
+    "StencilSpec": ("repro.core.stencil.StencilSpec",
+                    lambda: __import__("repro.core.stencil",
+                                       fromlist=["StencilSpec"]
+                                       ).StencilSpec),
+}
 
-from repro.core.ref import apply_stencil as stencil_ref  # noqa: F401
-from repro.core.stencil import StencilSpec  # noqa: F401
+
+def __getattr__(name: str):
+    if name in _ALIASES:
+        new_home, resolve = _ALIASES[name]
+        warnings.warn(
+            f"repro.kernels.ref.{name} is deprecated; use {new_home} "
+            "(the pre-engine oracle shim module was folded into the "
+            "plan-driven entry points)",
+            DeprecationWarning, stacklevel=2)
+        return resolve()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def swa_ref(q: jax.Array, k: jax.Array, v: jax.Array, window: int,
-            softcap: float | None = None) -> jax.Array:
-    """Dense windowed-causal attention oracle. q:(B,Hq,S,D), kv:(B,Hkv,S,D)."""
-    b, hq, s, d = q.shape
-    _, hkv, _, _ = k.shape
-    g = hq // hkv
-    kk = jnp.repeat(k, g, axis=1)
-    vv = jnp.repeat(v, g, axis=1)
-    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
-                        kk.astype(jnp.float32)) / math.sqrt(d)
-    if softcap is not None:
-        scores = softcap * jnp.tanh(scores / softcap)
-    q_pos = jnp.arange(s)[:, None]
-    k_pos = jnp.arange(s)[None, :]
-    mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
-    scores = jnp.where(mask[None, None], scores, -1e30)
-    p = jax.nn.softmax(scores, axis=-1)
-    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)
+def __dir__():
+    return sorted(_ALIASES)

@@ -29,6 +29,27 @@ from .engine import element_blockspec
 NEG_INF = -1e30
 
 
+def swa_ref(q: jax.Array, k: jax.Array, v: jax.Array, window: int,
+            softcap: float | None = None) -> jax.Array:
+    """Dense windowed-causal attention oracle (the kernel's ground
+    truth).  q:(B,Hq,S,D), kv:(B,Hkv,S,D)."""
+    b, hq, s, d = q.shape
+    _, hkv, _, _ = k.shape
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(d)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, *, window, tq, softcap, scale):
     # q: (1, 1, G, tq, D); k/v: (1, 1, tq + window - 1, D)
     q = q_ref[0, 0].astype(jnp.float32)            # (G, tq, D)

@@ -1,3 +1,4 @@
 from .engine import ServeEngine
+from .stencil import StencilRequest, StencilServer, ServeStats
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "StencilRequest", "StencilServer", "ServeStats"]

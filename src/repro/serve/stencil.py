@@ -1,0 +1,207 @@
+"""Batched stencil serving: heterogeneous requests through one compiled
+pipeline.
+
+The ROADMAP's serving scenario ("heavy traffic from millions of users")
+meets the plan pipeline here: requests arrive as arbitrary mixes of
+``(spec-name, grid, iters)``, and the server
+
+1. **buckets** them by plan-cache key (spec — including boundary and
+   structure — grid shape, dtype, backend, sweeps, tile request) plus
+   ``iters``;
+2. executes each bucket as **one vmapped fused call** through the
+   process-wide jitted batch runner
+   (:func:`repro.core.plan.batch_runner`): one dispatch per bucket
+   instead of one per request, one plan lowering per *novel* key
+   instead of one per call;
+3. reports **throughput / latency / cache-hit stats** per batch
+   (:class:`ServeStats`), including the plan-cache delta — a warm
+   server lowers nothing and autotunes nothing.
+
+``serve_sequential`` executes the same requests one by one through the
+same plans: the baseline the batched path is benchmarked against
+(``benchmarks/serving.py`` → ``BENCH_5.json``; the CI smoke asserts the
+≥ 3× batched-vs-sequential throughput on the bucket-friendly workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import plan as _plan
+from repro.core.stencil import (PAPER_STENCILS, StencilSpec, advect1d,
+                                advect2d)
+
+
+def default_specs() -> dict[str, StencilSpec]:
+    """The out-of-the-box serving catalogue: the paper's six stencils
+    plus the periodic advection workloads."""
+    specs = dict(PAPER_STENCILS)
+    for s in (advect1d(), advect2d()):
+        specs[s.name] = s
+    return specs
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilRequest:
+    """One serving request: apply ``iters`` sweeps of the named stencil
+    to ``grid``."""
+
+    spec_name: str
+    grid: Any
+    iters: int
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """What one ``serve`` call did, for dashboards and assertions."""
+
+    n_requests: int
+    n_buckets: int
+    seconds: float
+    requests_per_s: float
+    points_per_s: float
+    batched: bool
+    plan_cache: dict            # delta: hits/misses/lowers/autotune_calls
+    buckets: list               # per-bucket: spec, shape, size, seconds
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _cache_delta(before: dict, after: dict) -> dict:
+    delta = {k: after[k] - before[k]
+             for k in ("hits", "misses", "lowers", "autotune_calls")}
+    total = delta["hits"] + delta["misses"]
+    delta["hit_rate"] = delta["hits"] / total if total else 1.0
+    return delta
+
+
+class StencilServer:
+    """Batched stencil-serving front-end over the plan pipeline.
+
+    ``specs`` maps request names to :class:`StencilSpec` s (defaults to
+    the paper's six); ``backend``/``sweeps``/``tile``/``interpret`` are
+    the engine options every plan is lowered with (``sweeps=t`` fuses
+    ``t`` applications per block exactly as ``CasperEngine.run``, with
+    remainder plans from the cache).
+    """
+
+    def __init__(self, specs: Mapping[str, StencilSpec] | None = None, *,
+                 backend: str = "ref", sweeps: int = 1,
+                 tile=None, interpret: bool | None = None):
+        if sweeps < 1:
+            raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+        self.specs = default_specs() if specs is None else dict(specs)
+        self.backend = backend
+        self.sweeps = sweeps
+        self.tile_request = _plan.canonical_tile_request(tile)
+        self.interpret = _plan.resolve_interpret(interpret)
+
+    def register(self, spec: StencilSpec) -> None:
+        """Make ``spec`` servable under ``spec.name``."""
+        self.specs[spec.name] = spec
+
+    # -- bucketing ----------------------------------------------------------
+    def bucket_key(self, req: StencilRequest) -> tuple:
+        """The grouping key: the request's plan-cache key + ``iters``.
+        Requests sharing it are executed as one vmapped fused call."""
+        spec = self.specs[req.spec_name]
+        shape, dtype = req.grid.shape, req.grid.dtype   # no device round-trip
+        if len(shape) != spec.ndim:
+            raise ValueError(
+                f"request grid rank {len(shape)} != {req.spec_name} ndim "
+                f"{spec.ndim}")
+        return _plan.plan_key(spec, shape, dtype, self.backend,
+                              self.sweeps, self.tile_request,
+                              self.interpret) + (int(req.iters),)
+
+    def _buckets(self, requests: Sequence[StencilRequest]) -> dict:
+        buckets: dict[tuple, list[int]] = {}
+        for i, req in enumerate(requests):
+            buckets.setdefault(self.bucket_key(req), []).append(i)
+        return buckets
+
+    # -- execution ----------------------------------------------------------
+    def serve(self, requests: Sequence[StencilRequest]
+              ) -> tuple[list, ServeStats]:
+        """Execute ``requests`` (any mix of specs/shapes/iters); returns
+        per-request results (host arrays, ready to ship back) in request
+        order plus :class:`ServeStats`.
+
+        Same-bucket requests are stacked and run as one vmapped fused
+        call; the plan (factorization, ghost strategy, tile,
+        decomposition) is lowered at most once per novel bucket and
+        served from the process-wide cache afterwards.
+        """
+        before = _plan.plan_cache_stats()
+        results: list = [None] * len(requests)
+        bucket_stats = []
+        points = 0
+        t0 = time.perf_counter()
+        for key, idxs in self._buckets(requests).items():
+            spec = self.specs[requests[idxs[0]].spec_name]
+            iters = requests[idxs[0]].iters
+            grids = [requests[i].grid for i in idxs]
+            if all(isinstance(g, np.ndarray) for g in grids):
+                # requests usually arrive as host buffers: stack on host,
+                # pay ONE device transfer per bucket (stacking 48 small
+                # device arrays costs more than the whole fused call)
+                stacked = jnp.asarray(np.stack(grids))
+            else:
+                stacked = jnp.stack([jnp.asarray(g) for g in grids])
+            run = _plan.batch_runner(spec, self.backend, self.sweeps,
+                                     self.tile_request, self.interpret)
+            tb = time.perf_counter()
+            out = np.asarray(run(stacked, iters=iters))  # one transfer back
+            bucket_stats.append({
+                "spec": spec.name, "shape": tuple(stacked.shape[1:]),
+                "iters": iters, "size": len(idxs),
+                "seconds": time.perf_counter() - tb,
+            })
+            points += int(stacked.size)
+            for j, i in enumerate(idxs):
+                results[i] = out[j]
+        seconds = time.perf_counter() - t0
+        stats = ServeStats(
+            n_requests=len(requests), n_buckets=len(bucket_stats),
+            seconds=seconds,
+            requests_per_s=len(requests) / seconds if seconds else 0.0,
+            points_per_s=points / seconds if seconds else 0.0,
+            batched=True,
+            plan_cache=_cache_delta(before, _plan.plan_cache_stats()),
+            buckets=bucket_stats)
+        return results, stats
+
+    def serve_sequential(self, requests: Sequence[StencilRequest]
+                         ) -> tuple[list, ServeStats]:
+        """The per-request baseline: every request is its own dispatch
+        through the (shared, cached) single-grid runner.  Same plans,
+        same results — only the batching differs, which is exactly what
+        ``BENCH_5`` measures."""
+        before = _plan.plan_cache_stats()
+        results: list = []
+        points = 0
+        t0 = time.perf_counter()
+        for req in requests:
+            spec = self.specs[req.spec_name]
+            grid = jnp.asarray(req.grid)
+            run = _plan.runner(spec, self.backend, self.sweeps,
+                               self.tile_request, self.interpret)
+            out = np.asarray(run(grid, iters=req.iters))
+            points += int(grid.size)
+            results.append(out)
+        seconds = time.perf_counter() - t0
+        stats = ServeStats(
+            n_requests=len(requests), n_buckets=len(requests),
+            seconds=seconds,
+            requests_per_s=len(requests) / seconds if seconds else 0.0,
+            points_per_s=points / seconds if seconds else 0.0,
+            batched=False,
+            plan_cache=_cache_delta(before, _plan.plan_cache_stats()),
+            buckets=[])
+        return results, stats

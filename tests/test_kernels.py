@@ -8,7 +8,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core import PAPER_STENCILS
 from repro.core import ref as cref
 from repro.kernels import ops
-from repro.kernels import ref as kref
+from repro.kernels.swa import swa_ref
 
 DTYPES = [jnp.float32, jnp.bfloat16]
 SHAPES = {
@@ -67,7 +67,7 @@ def test_swa_kernel_property(b, hkv, g, s, d, w, softcap, seed):
     k = jax.random.normal(kk, (b, hkv, s, d), jnp.float32)
     v = jax.random.normal(kv, (b, hkv, s, d), jnp.float32)
     got = ops.swa(q, k, v, window=w, tq=32, softcap=softcap)
-    want = kref.swa_ref(q, k, v, window=w, softcap=softcap)
+    want = swa_ref(q, k, v, window=w, softcap=softcap)
     assert float(jnp.max(jnp.abs(got - want))) < 2e-5
 
 
@@ -77,7 +77,7 @@ def test_swa_equals_causal_when_window_covers_all(rng):
     k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
     got = ops.swa(q, k, v, window=s, tq=32)
-    want = kref.swa_ref(q, k, v, window=s)
+    want = swa_ref(q, k, v, window=s)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
 
@@ -98,7 +98,7 @@ def test_swa_kernel_bf16(dtype, rng):
     k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
     v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
     got = ops.swa(q, k, v, window=w, tq=32).astype(jnp.float32)
-    want = kref.swa_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+    want = swa_ref(q.astype(jnp.float32), k.astype(jnp.float32),
                         v.astype(jnp.float32), window=w)
     assert float(jnp.max(jnp.abs(got - want))) < 0.08
 

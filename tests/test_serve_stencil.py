@@ -1,0 +1,101 @@
+"""Batched stencil-serving front-end: bucketing, correctness, stats."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import PAPER_STENCILS
+from repro.core import ref as cref
+from repro.serve.stencil import StencilRequest, StencilServer, default_specs
+
+
+def _mixed_requests(rng):
+    def g(shape):
+        return rng.standard_normal(shape).astype(np.float32)
+    return [
+        StencilRequest("jacobi2d", g((24, 32)), 5),
+        StencilRequest("jacobi1d", g((96,)), 4),
+        StencilRequest("jacobi2d", g((24, 32)), 5),     # same bucket as #0
+        StencilRequest("advect2d", g((16, 32)), 6),     # periodic boundary
+        StencilRequest("jacobi2d", g((16, 32)), 5),     # same spec, new shape
+        StencilRequest("heat3d", g((6, 8, 10)), 3),
+        StencilRequest("jacobi2d", g((24, 32)), 7),     # same shape, new iters
+    ]
+
+
+def test_serve_matches_oracle_in_request_order(rng):
+    server = StencilServer(backend="ref", sweeps=2)
+    reqs = _mixed_requests(rng)
+    results, stats = server.serve(reqs)
+    assert len(results) == len(reqs)
+    for req, got in zip(reqs, results):
+        spec = default_specs()[req.spec_name]
+        want = cref.run_iterations(spec, jnp.asarray(req.grid), req.iters)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5), req.spec_name
+    # buckets: {jacobi2d 24x32 i5} x2, and 5 singletons
+    assert stats.n_requests == 7
+    assert stats.n_buckets == 6
+    assert sum(b["size"] for b in stats.buckets) == 7
+    assert max(b["size"] for b in stats.buckets) == 2
+
+
+def test_batched_equals_sequential(rng):
+    server = StencilServer(backend="ref", sweeps=3)
+    reqs = _mixed_requests(rng)
+    batched, _ = server.serve(reqs)
+    sequential, _ = server.serve_sequential(reqs)
+    for a, b in zip(batched, sequential):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_warm_server_serves_from_cache(rng):
+    server = StencilServer(backend="ref", sweeps=2)
+    reqs = _mixed_requests(rng)
+    server.serve(reqs)                        # cold: lowers novel plans
+    _, stats = server.serve(reqs)             # warm: must lower nothing
+    assert stats.plan_cache["lowers"] == 0
+    assert stats.plan_cache["autotune_calls"] == 0
+    assert stats.plan_cache["misses"] == 0
+    assert stats.plan_cache["hit_rate"] == 1.0
+    assert stats.requests_per_s > 0 and stats.points_per_s > 0
+
+
+def test_serve_pallas_backend_bucket(rng):
+    """A pallas-backend server runs the same bucketed path through the
+    fused kernel (interpret mode on CPU), tile autotuned once."""
+    server = StencilServer(backend="pallas", sweeps=2, tile="auto")
+    reqs = [StencilRequest("jacobi2d",
+                           rng.standard_normal((24, 32)).astype(np.float32),
+                           4) for _ in range(3)]
+    results, stats = server.serve(reqs)
+    assert stats.n_buckets == 1
+    want = cref.run_iterations(PAPER_STENCILS["jacobi2d"],
+                               jnp.asarray(reqs[0].grid), 4)
+    np.testing.assert_allclose(results[0], np.asarray(want), atol=1e-5)
+    _, warm = server.serve(reqs)
+    assert warm.plan_cache["lowers"] == 0
+    assert warm.plan_cache["autotune_calls"] == 0
+
+
+def test_request_validation(rng):
+    server = StencilServer()
+    with pytest.raises(KeyError):
+        server.serve([StencilRequest("nope", np.zeros((4, 4), np.float32),
+                                     1)])
+    with pytest.raises(ValueError):
+        server.serve([StencilRequest("jacobi2d", np.zeros(8, np.float32),
+                                     1)])
+    with pytest.raises(ValueError):
+        StencilServer(sweeps=0)
+
+
+def test_register_custom_spec(rng):
+    from repro.core import StencilSpec
+    server = StencilServer(backend="ref", sweeps=1)
+    custom = StencilSpec("mine", 1, (((0,), 0.5), ((-1,), 0.25),
+                                     ((1,), 0.25)), boundary="reflect")
+    server.register(custom)
+    g = rng.standard_normal(40).astype(np.float32)
+    results, _ = server.serve([StencilRequest("mine", g, 3)])
+    want = cref.run_iterations(custom, jnp.asarray(g), 3)
+    np.testing.assert_allclose(results[0], np.asarray(want), atol=1e-6)
