@@ -1,0 +1,192 @@
+"""BENCH_6: fused multi-stencil pipelines vs the stage-by-stage chain.
+
+Measures the tentpole quantity of the pipeline subsystem: a
+:class:`~repro.core.stencil.StencilPipeline` lowered into **one fused
+ExecutionPlan** — each tile fetches a window widened by the *sum* of the
+stage radii and every intermediate stage field stays in VMEM — against
+the unfused baseline that runs each stage as its own (cached, jitted)
+single-stage plan, writing every intermediate field to HBM.
+
+Two comparisons per workload, both recorded in ``BENCH_6.json``:
+
+* **modeled HBM bytes** per chain application
+  (:func:`repro.kernels.engine.hbm_pipeline_traffic`): the fused number
+  must be strictly below the staged baseline — this is analytic, exact,
+  and machine-independent, so the CI smoke pins it hard;
+* **measured wallclock** of ``steps`` chain applications through the
+  real Pallas executor (interpret mode on CPU), fused vs per-stage
+  jitted runners, min-of-reps alternating timing (the BENCH_4/5
+  discipline) — the smoke asserts fused beats the unfused chain.
+
+Workloads are the shipped paper pipelines: reaction–diffusion (reflect
+plate) and advect–diffuse (periodic torus) — one edge-fixup boundary,
+one wrap boundary, so both fused ghost paths are exercised.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAPER_PIPELINES, apply_pipeline
+from repro.core import plan as _plan
+from repro.kernels import engine as keng
+
+BENCH6_SCHEMA = "casper-bench-6"
+BENCH6_VERSION = 1
+
+
+def _mintime(fns: dict, reps: int) -> dict:
+    for fn in fns.values():
+        fn()                                    # warm up / compile / lower
+    best = {k: float("inf") for k in fns}
+    for _ in range(reps):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def _bench_one(pipe, shape, steps: int, reps: int, backend: str) -> dict:
+    rng = np.random.default_rng(11)
+    g = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    tile_req = _plan.canonical_tile_request("auto" if backend == "pallas"
+                                            else None)
+    interp = _plan.resolve_interpret(None)
+
+    # fused: the whole chain is one plan; one jitted dispatch per run
+    fused_run = _plan.runner(pipe, backend, 1, tile_req, interp)
+    # staged baseline: each stage its own cached plan + jitted runner —
+    # the strongest honest unfused chain (no per-step retraces, the same
+    # autotuned per-stage tiles a user would get engine-by-engine)
+    stage_runs = [_plan.runner(s, backend, 1, tile_req, interp)
+                  for s in pipe.stages]
+
+    def staged(x=g):
+        for _ in range(steps):
+            for r in stage_runs:
+                x = r(x, iters=1)
+        return x
+
+    # correctness first: both paths vs the chained per-stage oracle
+    want = g
+    for _ in range(steps):
+        want = apply_pipeline(pipe, want)
+    err_fused = float(jnp.max(jnp.abs(fused_run(g, iters=steps) - want)))
+    err_staged = float(jnp.max(jnp.abs(staged() - want)))
+
+    best = _mintime(
+        {"fused": lambda: fused_run(g, iters=steps).block_until_ready(),
+         "staged": lambda: staged().block_until_ready()},
+        reps=reps)
+
+    plan = _plan.lower(pipe, shape, g.dtype, backend=backend, sweeps=1,
+                       tile=tile_req, interpret=interp)
+    model = keng.hbm_pipeline_traffic(pipe, shape, tile=plan.tile,
+                                      itemsize=g.dtype.itemsize)
+    return {
+        "pipeline": pipe.name,
+        "stages": list(pipe.stage_names),
+        "boundaries": list(pipe.boundary_modes),
+        "shape": list(shape),
+        "steps": steps,
+        "tile": list(plan.tile) if plan.tile else None,
+        "ghost_strategy": plan.ghost_strategy,
+        "fused": plan.fused,
+        "model": model,
+        "wallclock": {
+            "fused_s": best["fused"],
+            "staged_s": best["staged"],
+            "speedup": best["staged"] / best["fused"],
+        },
+        "max_abs_err_fused_vs_oracle": err_fused,
+        "max_abs_err_staged_vs_oracle": err_staged,
+    }
+
+
+def pipelines_bench(reps: int = 5, shape=(384, 768), steps: int = 8,
+                    backend: str = "pallas"):
+    """Fused-vs-staged pipelines on the shipped paper workloads.
+
+    Returns the standard ``(rows, detail)`` bench pair; ``detail`` keys:
+    ``bench6`` (the ``BENCH_6.json`` payload) and ``summary``.
+    """
+    workloads = [_bench_one(p, shape, steps, reps, backend)
+                 for p in PAPER_PIPELINES.values()]
+    payload = {
+        "schema": BENCH6_SCHEMA,
+        "version": BENCH6_VERSION,
+        "config": {
+            "backend": backend, "reps": reps, "steps": steps,
+            "shape": list(shape),
+            "jax_backend": jax.default_backend(),
+        },
+        "workloads": workloads,
+    }
+    rows = []
+    for w in workloads:
+        rows.append((f"pipeline_{w['pipeline']}_hbm_reduction", 0.0,
+                     round(w["model"]["reduction"], 3)))
+        rows.append((f"pipeline_{w['pipeline']}_wallclock_speedup",
+                     w["wallclock"]["fused_s"] * 1e6 / steps,
+                     round(w["wallclock"]["speedup"], 2)))
+    detail = {
+        "bench6": payload,
+        "summary": {
+            "mean_hbm_reduction": float(np.mean(
+                [w["model"]["reduction"] for w in workloads])),
+            "mean_wallclock_speedup": float(np.mean(
+                [w["wallclock"]["speedup"] for w in workloads])),
+            "max_err": max(w["max_abs_err_fused_vs_oracle"]
+                           for w in workloads),
+        },
+    }
+    return rows, detail
+
+
+def bench6_schema_errors(payload) -> list[str]:
+    """Validate a BENCH_6.json payload; returns a list of problems
+    (empty = schema-valid).  Pinned so future PRs appending to the perf
+    trajectory keep the file machine-readable."""
+    errs = []
+    if not isinstance(payload, dict):
+        return ["payload is not an object"]
+    if payload.get("schema") != BENCH6_SCHEMA:
+        errs.append(f"schema != {BENCH6_SCHEMA!r}")
+    if not isinstance(payload.get("version"), int):
+        errs.append("version missing/not int")
+    if not isinstance(payload.get("config"), dict):
+        errs.append("config missing")
+    wls = payload.get("workloads")
+    if not isinstance(wls, list) or not wls:
+        return errs + ["workloads missing/empty"]
+    for i, w in enumerate(wls):
+        if not isinstance(w, dict):
+            errs.append(f"workloads[{i}] not an object")
+            continue
+        for key in ("pipeline", "stages", "shape", "steps"):
+            if key not in w:
+                errs.append(f"workloads[{i}].{key} missing")
+        model = w.get("model")
+        if not isinstance(model, dict):
+            errs.append(f"workloads[{i}].model missing")
+        else:
+            for key in ("fused_bytes", "staged_bytes", "reduction"):
+                if not isinstance(model.get(key), (int, float)):
+                    errs.append(f"workloads[{i}].model.{key} not a number")
+        wc = w.get("wallclock")
+        if not isinstance(wc, dict):
+            errs.append(f"workloads[{i}].wallclock missing")
+        else:
+            for key in ("fused_s", "staged_s", "speedup"):
+                if not isinstance(wc.get(key), (int, float)):
+                    errs.append(
+                        f"workloads[{i}].wallclock.{key} not a number")
+        if not isinstance(w.get("max_abs_err_fused_vs_oracle"),
+                          (int, float)):
+            errs.append(f"workloads[{i}].max_abs_err_fused_vs_oracle "
+                        "not a number")
+    return errs

@@ -20,6 +20,8 @@ from benchmarks.paper_figs import (bench4_schema_errors,  # noqa: E402
                                    structure_bench, table4_instructions,
                                    temporal_blocking)
 from benchmarks.lm_roofline import lm_roofline  # noqa: E402
+from benchmarks.pipelines import (bench6_schema_errors,  # noqa: E402
+                                  pipelines_bench)
 from benchmarks.serving import (bench5_schema_errors,  # noqa: E402
                                 serving_bench)
 from benchmarks.stencil_cluster import stencil_cluster_mapping  # noqa: E402
@@ -27,8 +29,8 @@ from benchmarks.stencil_cluster import stencil_cluster_mapping  # noqa: E402
 BENCHES = (
     fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu, fig13_pims,
     fig14_mapping, table4_instructions, temporal_blocking,
-    structure_bench, stencil_wallclock, serving_bench, lm_roofline,
-    stencil_cluster_mapping,
+    structure_bench, stencil_wallclock, serving_bench, pipelines_bench,
+    lm_roofline, stencil_cluster_mapping,
 )
 
 
@@ -61,6 +63,14 @@ def write_bench5(detail: dict, root: str = _ROOT) -> str:
                         "BENCH_5.json", root)
 
 
+def write_bench6(detail: dict, root: str = _ROOT) -> str:
+    """Write the pipelines bench's BENCH_6.json at the repo root
+    (fused-vs-staged modeled HBM bytes + measured wallclock per
+    workload); schema-checked before writing."""
+    return _write_bench(detail, "bench6", bench6_schema_errors,
+                        "BENCH_6.json", root)
+
+
 def main() -> None:
     out_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "results")
@@ -77,6 +87,8 @@ def main() -> None:
     print(f"# wrote {write_bench4(all_detail['structure_bench'])}",
           file=sys.stderr)
     print(f"# wrote {write_bench5(all_detail['serving_bench'])}",
+          file=sys.stderr)
+    print(f"# wrote {write_bench6(all_detail['pipelines_bench'])}",
           file=sys.stderr)
     summaries = {k: v.get("summary") for k, v in all_detail.items()
                  if isinstance(v, dict) and v.get("summary")}

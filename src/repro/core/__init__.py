@@ -1,28 +1,35 @@
 """Casper core: the paper's contribution as composable JAX modules."""
-from .stencil import (StencilSpec, PAPER_STENCILS, DOMAIN_SIZES, jacobi1d,
+from .stencil import (StencilSpec, StencilPipeline, PAPER_STENCILS,
+                      PAPER_PIPELINES, DOMAIN_SIZES, jacobi1d,
                       jacobi2d, seven_point_1d, blur2d, heat3d, star33_3d,
-                      advect1d, advect2d, domain_for, parse_boundary,
+                      advect1d, advect2d, reaction_diffusion2d,
+                      advect_diffuse2d, as_stages, domain_for, parse_boundary,
                       BOUNDARY_MODES, STRUCTURES, factor_taps,
                       Factorization, FactorTerm, AxisKernel)
-from .ref import apply_stencil, run_iterations, pad_boundary
+from .ref import (apply_stencil, run_iterations, pad_boundary,
+                  apply_pipeline, run_pipeline)
 from .plan import (ExecutionPlan, PLAN_CACHE, PlanCache, lower,
                    plan_cache_stats, execute, run_plan, resolve_interpret,
                    ghost_strategy_for, exchange_strategy_for)
 from .streams import plan_streams, StreamPlan
-from .isa import assemble, decode, Instr, Program
+from .isa import (assemble, assemble_pipeline, assemble_any, decode, Instr,
+                  Program, PipelineProgram)
 from .vm import SpuVM, run_program
 from .segment import SegmentConfig, access_counts, remote_fraction
 from .halo import distributed_stencil_fn, exchange_halo_1axis
 from .engine import CasperEngine
 
 __all__ = [
-    "StencilSpec", "PAPER_STENCILS", "DOMAIN_SIZES", "jacobi1d", "jacobi2d",
+    "StencilSpec", "StencilPipeline", "PAPER_STENCILS", "PAPER_PIPELINES",
+    "DOMAIN_SIZES", "jacobi1d", "jacobi2d",
     "seven_point_1d", "blur2d", "heat3d", "star33_3d", "advect1d",
-    "advect2d", "domain_for", "parse_boundary", "BOUNDARY_MODES",
+    "advect2d", "reaction_diffusion2d", "advect_diffuse2d", "as_stages",
+    "domain_for", "parse_boundary", "BOUNDARY_MODES",
     "STRUCTURES", "factor_taps", "Factorization", "FactorTerm", "AxisKernel",
-    "apply_stencil", "run_iterations", "pad_boundary", "plan_streams",
-    "StreamPlan",
-    "assemble", "decode", "Instr", "Program", "SpuVM", "run_program",
+    "apply_stencil", "run_iterations", "pad_boundary", "apply_pipeline",
+    "run_pipeline", "plan_streams", "StreamPlan",
+    "assemble", "assemble_pipeline", "assemble_any", "decode", "Instr",
+    "Program", "PipelineProgram", "SpuVM", "run_program",
     "SegmentConfig", "access_counts", "remote_fraction",
     "distributed_stencil_fn", "exchange_halo_1axis", "CasperEngine",
     "ExecutionPlan", "PLAN_CACHE", "PlanCache", "lower", "plan_cache_stats",

@@ -31,6 +31,13 @@ oracle.  The engine is frozen after ``__init__`` (mutating ``sweeps``/
 ``backend``/``tile``/... raises); build a new engine to change options,
 including the boundary.
 
+``spec`` may also be a :class:`~repro.core.stencil.StencilPipeline` — a
+DAG chain of stages lowered into one fused plan (intermediate stage
+fields never round-trip HBM; see docs/pipelines.md).  Every engine
+surface (``run`` / ``step`` / ``distributed_fn`` / ``plan_for``) accepts
+it transparently; ``engine.program`` is then the per-stage
+:class:`~repro.core.isa.PipelineProgram`.
+
 The assembled Casper program (ISA) is available as ``engine.program`` and
 is what `initStencilcode` would broadcast to the SPUs.
 """
@@ -43,10 +50,10 @@ import jax
 
 from . import plan as _plan
 from .halo import distributed_stencil_fn
-from .isa import Program, assemble
+from .isa import assemble_any
 from .plan import resolve_interpret  # canonical home is core.plan
 from .segment import SegmentConfig
-from .stencil import StencilSpec
+from .stencil import StencilPipeline, StencilSpec
 
 Backend = Literal["ref", "pallas"]
 
@@ -54,7 +61,7 @@ Backend = Literal["ref", "pallas"]
 class CasperEngine:
     def __init__(
         self,
-        spec: StencilSpec,
+        spec: StencilSpec | StencilPipeline,
         backend: Backend = "ref",
         segment: SegmentConfig | None = None,
         interpret: bool | None = None,
@@ -72,7 +79,8 @@ class CasperEngine:
         self.interpret = resolve_interpret(interpret)
         self.sweeps = sweeps
         self.tile = tile
-        self.program: Program = assemble(spec)
+        # Pipelines assemble to a PipelineProgram (one Program per stage).
+        self.program = assemble_any(spec)
         self._frozen = True
 
     def __setattr__(self, name, value):

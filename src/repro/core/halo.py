@@ -54,6 +54,7 @@ from jax.experimental.shard_map import shard_map
 
 from . import plan as _plan
 from . import ref as _ref
+from . import stencil as _stencil
 from .stencil import StencilSpec
 
 
@@ -160,6 +161,20 @@ def _local_multisweep(plan: "_plan.ExecutionPlan", x: jax.Array) -> jax.Array:
             padded = _ref.pad_boundary(padded, pad, mode, value)
             origin.append(0)
             grid_shape.append(x.shape[d])
+    if plan.is_pipeline:
+        # Fused chain on the widened block: the exchange above already
+        # fetched the sweeps * sum-of-stage-radii deep halo (plan.halo is
+        # the per-dim stage sum), so every stage of every sweep computes
+        # from exchanged data — one collective launch pair per sharded
+        # axis per sweeps*n_stages stage applications.
+        if plan.backend == "pallas":
+            from repro.kernels import engine as keng  # lazy: optional dep
+            return keng.pipeline_window_sweep(
+                spec, padded, x.shape, origin, grid_shape,
+                tile=plan.tile, sweeps=plan.sweeps, interpret=plan.interpret)
+        return _ref.masked_window_pipeline(
+            padded, spec.stages, x.shape, plan.sweeps, origin, grid_shape,
+            x.dtype).astype(x.dtype)
     if plan.backend == "pallas":
         from repro.kernels import engine as keng  # lazy: optional dep
         return keng.stencil_window_sweep(
@@ -188,7 +203,7 @@ def execute_plan(plan: "_plan.ExecutionPlan", x: jax.Array) -> jax.Array:
 
 
 def distributed_stencil_fn(
-    spec: StencilSpec,
+    spec: "StencilSpec | _stencil.StencilPipeline",
     mesh: Mesh,
     grid_axes: Sequence[str | None],
     iters: int = 1,
@@ -202,7 +217,12 @@ def distributed_stencil_fn(
 
     ``grid_axes[d]`` names the mesh axis sharding grid dim ``d`` (None =
     replicated/unsharded).  Returns a function mapping the global grid to
-    the global grid after ``iters`` Jacobi sweeps.
+    the global grid after ``iters`` Jacobi sweeps.  ``spec`` may be a
+    :class:`~repro.core.stencil.StencilPipeline`: a fusable chain
+    exchanges one ``sweeps * sum(stage radii)``-deep halo per fused step
+    and runs every stage application shard-locally; a non-fusable chain
+    (mixed periodic/non-periodic stages) falls back to per-stage
+    distributed plans inside ``plan.execute``.
 
     ``sweeps=t`` applies temporal blocking across the wire: each fused
     step exchanges one ``t*halo``-deep halo (multi-hop when a shard is

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from .stencil import StencilSpec
+from .stencil import StencilPipeline, StencilSpec
 from .streams import MAX_SHIFT, StreamPlan, plan_streams
 
 INSTR_BITS = 15
@@ -154,6 +154,79 @@ class Program:
             "without_casper": aligned + 2 * unaligned + 1,
             "unaligned": unaligned,
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineProgram:
+    """The SPU program of a :class:`~repro.core.stencil.StencilPipeline`:
+    one assembled :class:`Program` per stage, dispatched back-to-back per
+    grid pass (the host broadcasts each stage's instruction buffer in
+    turn — the 64-entry buffer bounds one *stage*, not the chain).
+
+    Aggregate accounting (``n_instrs`` / ``dynamic_instruction_count`` /
+    ``loads_per_vector``) sums the per-stage numbers, so pipeline
+    programs report Table-4-style counts for one full chain application.
+    """
+
+    spec_name: str
+    stages: tuple[Program, ...]
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def plans(self) -> tuple[StreamPlan, ...]:
+        """Per-stage stream plans (a pipeline has no single plan)."""
+        return tuple(p.plan for p in self.stages)
+
+    @property
+    def words(self) -> tuple[int, ...]:
+        return tuple(w for p in self.stages for w in p.words)
+
+    @property
+    def n_instrs(self) -> int:
+        return sum(p.n_instrs for p in self.stages)
+
+    @property
+    def structured_n_instrs(self) -> int:
+        return sum(p.structured_n_instrs for p in self.stages)
+
+    def dynamic_instruction_count(
+        self, points: int, n_spus: int = 16, vector_width: int = 8,
+        structured: bool = False,
+    ) -> dict[str, int]:
+        """Key-wise sum of the per-stage Table 4 counts: every stage
+        makes one full grid pass of its own program."""
+        out: dict[str, int] = {}
+        for p in self.stages:
+            for key, v in p.dynamic_instruction_count(
+                    points, n_spus, vector_width, structured).items():
+                out[key] = out.get(key, 0) + v
+        return out
+
+    def loads_per_vector(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for p in self.stages:
+            for key, v in p.loads_per_vector().items():
+                out[key] = out.get(key, 0) + v
+        return out
+
+
+def assemble_pipeline(pipeline: StencilPipeline) -> PipelineProgram:
+    """StencilPipeline -> per-stage Casper programs (each stage respects
+    the 64-entry instruction buffer on its own)."""
+    return PipelineProgram(
+        spec_name=pipeline.name,
+        stages=tuple(assemble(s) for s in pipeline.stages))
+
+
+def assemble_any(spec):
+    """Assemble either spec kind: the dispatch point the lowering
+    pipeline and the engine use."""
+    if isinstance(spec, StencilPipeline):
+        return assemble_pipeline(spec)
+    return assemble(spec)
 
 
 def assemble(spec: StencilSpec) -> Program:

@@ -286,6 +286,66 @@ def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
     return max(t_mem, t_compute) + n_tiles * TPU_GRID_STEP_S
 
 
+def pallas_pipeline_tile_cost(pipeline, shape: tuple[int, ...],
+                              tile: tuple[int, ...], sweeps: int = 1,
+                              itemsize: int = 4) -> float:
+    """:func:`pallas_tile_cost` generalized to a fused
+    :class:`~repro.core.stencil.StencilPipeline` chain.
+
+    Traffic charges each tile one window read at the chain's summed halo
+    (``tile + 2*sweeps*H`` per dim, ``H`` = per-dim sum of stage radii)
+    plus one tile write — the fused pipeline's whole HBM footprint, all
+    intermediates staying in VMEM.  Compute walks the exact element-layer
+    schedule of ``ref.masked_window_pipeline``: each stage application
+    runs at its shrinking window size with *its own* structured per-point
+    flop count, and a reflect-mode next stage charges the per-axis ghost
+    re-mirror gather on the intermediate.  VMEM feasibility charges the
+    widened window, an accumulator, one live window-sized intermediate
+    per extra factored term of the richest stage, and the output block.
+    Returns ``inf`` when that resident set cannot fit.
+    """
+    stages = pipeline.stages
+    big_halo = pipeline.halo
+    n_tiles = math.prod(-(-n // t) for n, t in zip(shape, tile))
+    acc_itemsize = max(itemsize, 4)
+    max_terms = max(
+        (1 if s.factorization.compute_terms is None
+         else len(s.factorization.compute_terms)) for s in stages)
+
+    window = math.prod(t + 2 * sweeps * h for t, h in zip(tile, big_halo))
+    vmem = ((1 + max_terms) * window * acc_itemsize
+            + math.prod(tile) * itemsize)
+    if vmem > TPU_VMEM_BYTES:
+        return float("inf")
+
+    traffic = n_tiles * (window + math.prod(tile)) * itemsize
+    t_mem = traffic / TPU_HBM_BW
+
+    def padded_points(rem: tuple[int, ...]) -> int:
+        dims = [t + 2 * r for t, r in zip(tile, rem)]
+        dims[-1] = _ceil_to(dims[-1], VPU_LANES)
+        if len(dims) >= 2:
+            dims[-2] = _ceil_to(dims[-2], VPU_SUBLANES)
+        return math.prod(dims)
+
+    n = len(stages)
+    total = sweeps * n
+    rem = tuple(sweeps * h for h in big_halo)
+    flops = 0
+    step = 0
+    for _ in range(sweeps):
+        for k, stage in enumerate(stages):
+            rem = tuple(r - h for r, h in zip(rem, stage.halo))
+            pts = padded_points(rem)
+            flops += pts * stage.structured_flops_per_point()
+            step += 1
+            if (step < total
+                    and stages[(k + 1) % n].boundary_mode == "reflect"):
+                flops += pts * len(tile)
+    t_compute = flops * n_tiles / TPU_VPU_FLOPS_F32
+    return max(t_mem, t_compute) + n_tiles * TPU_GRID_STEP_S
+
+
 # ----------------------------------------------------------------------------
 # GPU / PIMS models
 # ----------------------------------------------------------------------------

@@ -54,8 +54,9 @@ from typing import Literal, Sequence
 import jax
 import jax.numpy as jnp
 
-from .isa import Program, assemble
-from .stencil import Factorization, StencilSpec, factor_taps
+from .isa import Program, assemble, assemble_pipeline
+from .stencil import (Factorization, StencilPipeline, StencilSpec, as_stages,
+                      factor_taps)
 
 Backend = Literal["ref", "pallas", "vm"]
 
@@ -79,8 +80,11 @@ BACKENDS = ("ref", "pallas", "vm")
 #:                        distributed shard-local kernel, whose window is
 #:                        the exchanged halo);
 #: * ``"stream"``       — SPU VM: ghost stream elements served per mode
-#:                        at access time.
-GHOST_STRATEGIES = ("pad", "pad-free", "padded-window", "stream")
+#:                        at access time;
+#: * ``"staged"``       — non-fusable pipelines only: execute the chain
+#:                        stage by stage through per-stage cached plans
+#:                        (each stage re-resolves its own strategy).
+GHOST_STRATEGIES = ("pad", "pad-free", "padded-window", "stream", "staged")
 
 #: Halo-exchange strategies for one sharded axis of a distributed plan:
 #: ``"zero-fill"`` (plain ``ppermute``; edge devices receive zeros),
@@ -163,6 +167,12 @@ def ghost_strategy_for(spec: StencilSpec, shape: Sequence[int],
     ``kernels.engine._PERIODIC_WHOLE_GRID_BYTES`` by default).  Both
     fallbacks produce bitwise-identical results through the padded
     window path.
+
+    Also accepts a fusable :class:`~repro.core.stencil.StencilPipeline`:
+    its ``halo`` is the per-dim sum of stage radii and its
+    ``boundary_mode`` is ``"periodic"`` exactly when every stage is
+    periodic (the only fusable periodic case), so the same decision rule
+    applies verbatim to the chain's widened window.
     """
     import math
     tile = normalize_tile(spec, tile)
@@ -194,7 +204,7 @@ class ExecutionPlan:
     :data:`PLAN_CACHE`.
     """
 
-    spec: StencilSpec
+    spec: StencilSpec | StencilPipeline
     shape: tuple[int, ...]              # global grid shape
     dtype: str                          # canonical dtype name
     backend: str                        # "ref" | "pallas" | "vm"
@@ -203,17 +213,20 @@ class ExecutionPlan:
     tile: tuple[int, ...] | None        # resolved output tile (pallas only)
     tile_request: object                # what was asked: "auto"/tuple/None
     ghost_strategy: str                 # one of GHOST_STRATEGIES
-    halo: tuple[int, ...]
+    halo: tuple[int, ...]               # per application (pipelines: sum)
     deep_halo: tuple[int, ...]          # sweeps * halo, per dim
-    factorization: Factorization        # the pinned f64 compute order
-    boundary_mode: str
+    factorization: Factorization | None  # pinned f64 order (None: pipeline —
+                                         # each stage keeps its own)
+    boundary_mode: str                  # pipelines: stage 0 (initial ext.)
     boundary_value: float
-    program: Program                    # assembled SPU program (ISA)
+    program: object                     # assembled Program / PipelineProgram
     mesh: object | None = None          # jax Mesh for distributed plans
     grid_axes: tuple | None = None      # mesh axis name per grid dim
     exchange: tuple | None = None       # per-dim exchange strategy / None
     shard_shape: tuple[int, ...] | None = None
     mesh_fingerprint: tuple | None = None
+    fused: bool = True                  # False: non-fusable pipeline —
+                                        # execute stage plans in sequence
 
     @property
     def stream_plan(self):
@@ -223,6 +236,25 @@ class ExecutionPlan:
     @property
     def is_distributed(self) -> bool:
         return self.mesh is not None
+
+    @property
+    def is_pipeline(self) -> bool:
+        return isinstance(self.spec, StencilPipeline)
+
+    @property
+    def stages(self) -> tuple[StencilSpec, ...]:
+        """The stage chain: the pipeline's stages, or ``(spec,)``."""
+        return as_stages(self.spec)
+
+    def stage_plan(self, k: int) -> "ExecutionPlan":
+        """The single-sweep plan of stage ``k`` — same shape/dtype/
+        backend/tile request/mesh, lowered through the cache on demand
+        (the staged fallback of non-fusable pipelines executes these;
+        fused pipelines never need them)."""
+        return lower(self.stages[k], self.shape, self.dtype,
+                     backend=self.backend, sweeps=1, tile=self.tile_request,
+                     mesh=self.mesh, grid_axes=self.grid_axes,
+                     interpret=self.interpret)
 
     def decompose(self, iters: int) -> tuple[int, int]:
         """``iters = q * sweeps + r`` — the one statement of the fused
@@ -421,10 +453,76 @@ def _shard_shape(shape, mesh, axes) -> tuple[int, ...]:
     return tuple(out)
 
 
+def _lower_pipeline_uncached(pipe, shape, dtype, backend, sweeps, tile_req,
+                             mesh, axes, interp, fingerprint) -> ExecutionPlan:
+    """Lower a :class:`~repro.core.stencil.StencilPipeline` to one fused
+    plan: the fetched halo per application is the per-dim **sum of the
+    stage radii** (``plan.halo``), widened ``sweeps``-deep exactly like
+    single-spec temporal blocking (``deep_halo = sweeps * halo``) — the
+    ``sweeps=t`` math with heterogeneous taps per sweep.  Intermediate
+    stage fields live in the VMEM window and never round-trip HBM.
+
+    A chain mixing periodic with non-periodic stages cannot restore
+    between-stage ghosts tile-locally (see ``StencilPipeline.fusable``):
+    the plan is then marked ``fused=False`` with ghost strategy
+    ``"staged"`` and :func:`execute` runs the per-stage cached plans in
+    sequence instead.
+    """
+    halo = pipe.halo                        # per-dim sum of stage radii
+    deep = tuple(sweeps * h for h in halo)
+    fused = pipe.fusable
+    # stage 0's mode: the *initial* window extension (between stages the
+    # fused core restores ghosts per the consuming stage's own mode)
+    mode, value = pipe.boundary_mode, pipe.boundary_value
+
+    shard_shape = exchange = None
+    if mesh is not None:
+        shard_shape = _shard_shape(shape, mesh, axes)
+        if fused:
+            exchange = tuple(
+                exchange_strategy_for(mode) if axes[d] is not None else None
+                for d in range(pipe.ndim))
+
+    resolved_tile = None
+    ghost = "pad" if fused else "staged"
+    if not fused:
+        pass                                # stage plans decide everything
+    elif backend == "pallas":
+        tune_shape = shard_shape if shard_shape is not None else shape
+        if tile_req == "auto":
+            from repro.kernels import tune      # lazy: optional dep
+            PLAN_CACHE.autotune_calls += 1
+            resolved_tile = tune.autotune_pipeline(
+                pipe, tune_shape, sweeps=sweeps,
+                itemsize=dtype.itemsize).tile
+        else:
+            resolved_tile = normalize_tile(pipe, tile_req)
+        if mesh is not None:
+            ghost = "padded-window"
+        else:
+            ghost = ghost_strategy_for(pipe, shape, dtype.itemsize, sweeps,
+                                       resolved_tile)
+    elif backend == "vm":
+        ghost = "stream"
+
+    return ExecutionPlan(
+        spec=pipe, shape=shape, dtype=dtype.name, backend=backend,
+        sweeps=sweeps, interpret=interp, tile=resolved_tile,
+        tile_request=tile_req, ghost_strategy=ghost, halo=halo,
+        deep_halo=deep, factorization=None, boundary_mode=mode,
+        boundary_value=value, program=assemble_pipeline(pipe), mesh=mesh,
+        grid_axes=axes, exchange=exchange, shard_shape=shard_shape,
+        mesh_fingerprint=fingerprint, fused=fused)
+
+
 def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
                     axes, interp, fingerprint) -> ExecutionPlan:
     # counters (lowers, autotune_calls) update under the cache lock:
     # this only runs from PlanCache.get_or_lower
+    if isinstance(spec, StencilPipeline):
+        return _lower_pipeline_uncached(spec, shape, dtype, backend, sweeps,
+                                        tile_req, mesh, axes, interp,
+                                        fingerprint)
     halo = spec.halo
     deep = tuple(sweeps * h for h in halo)
     mode, value = spec.boundary_mode, spec.boundary_value
@@ -473,7 +571,15 @@ def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
 def execute(plan: ExecutionPlan, grid):
     """One fused block — ``plan.sweeps`` stencil applications — on the
     plan's backend.  Traceable under jit/vmap (except ``"vm"``, which is
-    numpy)."""
+    numpy).  A non-fusable pipeline plan (``fused=False``) executes its
+    stage chain through per-stage cached plans instead — same chained
+    semantics, per-stage HBM traffic."""
+    if plan.is_pipeline and not plan.fused:
+        out = grid
+        for _ in range(plan.sweeps):
+            for k in range(plan.spec.n_stages):
+                out = execute(plan.stage_plan(k), out)
+        return out
     if plan.is_distributed:
         from . import halo as _halo
         return _halo.execute_plan(plan, grid)

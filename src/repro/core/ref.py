@@ -18,7 +18,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .stencil import StencilSpec, _classify, factor_taps, parse_boundary
+from .stencil import (StencilSpec, _classify, as_stages, factor_taps,
+                      parse_boundary)
 
 
 def periodic_index(idx, n: int):
@@ -186,6 +187,52 @@ def factored_window_apply(x, terms, halo, out_shape, dtype, *,
     return tsum(vals, (1.0,) * len(vals), dtype)
 
 
+def _window_apply(x, taps, halo, cur, acc_dtype, terms):
+    """One stencil application on window ``x``: the taps slice ``halo``
+    layers off per side, producing shape ``cur``.  Dispatches on the
+    factored ``terms`` (separable) vs the dense per-tap path, both
+    accumulating through :func:`tap_sum` — the pinned f64 order shared
+    by single-spec and pipeline fused cores alike."""
+    if terms is not None:
+        return factored_window_apply(x, terms, halo, cur, acc_dtype)
+    return tap_sum(
+        [jax.lax.dynamic_slice(
+            x, tuple(h + o for h, o in zip(halo, off)), cur)
+         for off, _ in taps],
+        [c for _, c in taps], acc_dtype)
+
+
+def _restore_ghosts(acc, mode, value, g0s, grid_shape, cur):
+    """Restore boundary ghosts of an intermediate window ``acc`` whose
+    dim-``d`` extent spans global coordinates ``[g0s[d], g0s[d]+cur[d])``
+    of a ``grid_shape`` grid — the closed form of the oracle re-padding
+    before the next application:
+
+    * ``zero`` / ``constant``: out-of-grid positions take the fill value
+      (which also kills values leaking in from any alignment padding);
+    * ``reflect``: out-of-grid positions re-mirror from the interior by
+      a per-axis gather whose source provably lies inside the window;
+    * ``periodic``: nothing — periodic ghosts evolve correctly on their
+      own (they stay bitwise equal to their wrapped interior sources).
+    """
+    ndim = len(cur)
+    if mode in ("zero", "constant"):
+        valid = None
+        for d in range(ndim):
+            coords = g0s[d] + jax.lax.broadcasted_iota(jnp.int32, cur, d)
+            vd = (coords >= 0) & (coords < grid_shape[d])
+            valid = vd if valid is None else valid & vd
+        fill = jnp.asarray(value if mode == "constant" else 0.0, acc.dtype)
+        return jnp.where(valid, acc, fill)
+    if mode == "reflect":
+        for d in range(ndim):
+            acc = reflect_gather(acc, d, g0s[d], grid_shape[d], cur[d])
+        return acc
+    if mode != "periodic":
+        raise ValueError(f"unknown boundary mode {mode!r}")
+    return acc
+
+
 def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
                          sweeps: int, starts, grid_shape,
                          acc_dtype, *, mode: str = "zero",
@@ -233,39 +280,73 @@ def masked_window_sweeps(window: jax.Array, taps, halo, out_shape,
     value); ``out_shape``/``grid_shape``/``halo`` must be static.
     """
     ndim = len(out_shape)
-    coeffs = [c for _, c in taps]
     terms = (None if structure == "dense"
              else _classify(ndim, tuple(taps)).compute_terms)
     x = window.astype(acc_dtype)
     for s in range(sweeps):
         rem = sweeps - 1 - s          # halo layers left after this sweep
         cur = tuple(t + 2 * rem * h for t, h in zip(out_shape, halo))
-        if terms is not None:
-            acc = factored_window_apply(x, terms, halo, cur, acc_dtype)
-        else:
-            acc = tap_sum(
-                [jax.lax.dynamic_slice(
-                    x, tuple(h + o for h, o in zip(halo, off)), cur)
-                 for off, _ in taps],
-                coeffs, acc_dtype)
+        acc = _window_apply(x, taps, halo, cur, acc_dtype, terms)
         if rem:
-            if mode in ("zero", "constant"):
-                valid = None
-                for d in range(ndim):
-                    g0 = starts[d] - rem * halo[d]
-                    coords = g0 + jax.lax.broadcasted_iota(jnp.int32, cur, d)
-                    vd = (coords >= 0) & (coords < grid_shape[d])
-                    valid = vd if valid is None else valid & vd
-                fill = jnp.asarray(value if mode == "constant" else 0.0,
-                                   acc.dtype)
-                acc = jnp.where(valid, acc, fill)
-            elif mode == "reflect":
-                for d in range(ndim):
-                    acc = reflect_gather(acc, d, starts[d] - rem * halo[d],
-                                         grid_shape[d], cur[d])
-            elif mode != "periodic":
-                raise ValueError(f"unknown boundary mode {mode!r}")
+            g0s = tuple(starts[d] - rem * halo[d] for d in range(ndim))
+            acc = _restore_ghosts(acc, mode, value, g0s, grid_shape, cur)
         x = acc
+    return x
+
+
+def masked_window_pipeline(window: jax.Array, stages, out_shape,
+                           sweeps: int, starts, grid_shape,
+                           acc_dtype) -> jax.Array:
+    """Apply ``sweeps`` fused applications of a stage *chain* to one
+    widened window — the pipeline generalization of
+    :func:`masked_window_sweeps` (to which it degenerates for one stage).
+
+    ``window`` carries ``sweeps * H`` ghost layers per side around an
+    ``out_shape`` interior at global coordinate ``starts`` of a
+    ``grid_shape`` grid, where ``H`` is the per-dim **sum of the stage
+    halos** (each stage consumes its own radius per application).  The
+    caller must have filled the ghosts with the boundary extension of
+    ``stages[0]`` — the first consumer.
+
+    After each stage application (except the last overall), the
+    remaining ghost layers are restored to the boundary extension of the
+    **next stage to run** — ``stages[(k+1) % n]``, wrapping across
+    applications — via :func:`_restore_ghosts`.  That per-consumer
+    restoration is exactly the closed form of the chained oracle
+    re-padding with each stage's own mode, so f64 results are
+    bit-identical to ``sweeps`` chained :func:`apply_pipeline` calls.
+    Tile-local restoration is impossible for a periodic stage inside a
+    mixed chain (periodic ghosts are only correct while *every* stage
+    keeps them periodic), which is why lowering refuses to fuse such
+    pipelines — see :class:`repro.core.stencil.StencilPipeline.fusable`.
+
+    Per-stage compute dispatches on each stage's own structure class
+    through :func:`_window_apply`, pinning the f64 order per stage.
+    """
+    ndim = len(out_shape)
+    stages = tuple(stages)
+    n = len(stages)
+    total = sweeps * n
+    rem = tuple(sweeps * sum(s.halo[d] for s in stages)
+                for d in range(ndim))           # ghost depth before stage 0
+    x = window.astype(acc_dtype)
+    step = 0
+    for _ in range(sweeps):
+        for k, stage in enumerate(stages):
+            halo = stage.halo
+            rem = tuple(r - h for r, h in zip(rem, halo))
+            cur = tuple(t + 2 * r for t, r in zip(out_shape, rem))
+            terms = (None if stage.structure == "dense"
+                     else _classify(ndim, stage.taps).compute_terms)
+            acc = _window_apply(x, stage.taps, halo, cur, acc_dtype, terms)
+            step += 1
+            if step < total:
+                nxt = stages[(k + 1) % n]
+                g0s = tuple(starts[d] - rem[d] for d in range(ndim))
+                acc = _restore_ghosts(acc, nxt.boundary_mode,
+                                      nxt.boundary_value, g0s, grid_shape,
+                                      cur)
+            x = acc
     return x
 
 
@@ -280,8 +361,32 @@ def execute_plan(plan, grid: jax.Array) -> jax.Array:
         raise ValueError(f"not a ref plan: backend={plan.backend!r}")
     out = grid
     for _ in range(plan.sweeps):
-        out = apply_stencil(plan.spec, out)
+        for stage in as_stages(plan.spec):
+            out = apply_stencil(stage, out)
     return out
+
+
+def apply_pipeline(pipeline, grid: jax.Array) -> jax.Array:
+    """One full application of a stage chain: ``stages[0]`` through
+    ``stages[-1]``, each as one :func:`apply_stencil` sweep under its own
+    boundary mode and structure — the **ground-truth chained oracle**
+    every fused pipeline executor is validated against (bit-identical in
+    f64).  Accepts a :class:`~repro.core.stencil.StencilPipeline` or any
+    sequence of specs."""
+    for stage in (pipeline.stages if hasattr(pipeline, "stages")
+                  else tuple(pipeline)):
+        grid = apply_stencil(stage, grid)
+    return grid
+
+
+def run_pipeline(pipeline, grid: jax.Array, iters: int) -> jax.Array:
+    """``iters`` chained applications of the full stage chain."""
+
+    def body(g, _):
+        return apply_pipeline(pipeline, g), None
+
+    final, _ = jax.lax.scan(body, grid, None, length=iters)
+    return final
 
 
 def apply_stencil(spec: StencilSpec, grid: jax.Array) -> jax.Array:

@@ -371,6 +371,113 @@ class StencilSpec:
         return self.flops_per_point() / self.bytes_per_point(itemsize)
 
 
+@dataclasses.dataclass(frozen=True)
+class StencilPipeline:
+    """A chain of stencil stages applied back-to-back, as one spec.
+
+    One *application* of the pipeline is ``stages[0]`` then ``stages[1]``
+    … then ``stages[-1]`` — the operator-split form of multi-kernel
+    solvers (advect → diffuse → project; reaction–diffusion splitting).
+    Each stage keeps its own taps, boundary mode and structure class.
+
+    A pipeline is accepted everywhere a :class:`StencilSpec` is: the
+    lowering pipeline (:mod:`repro.core.plan`) fuses the whole chain into
+    one ExecutionPlan whose fetched halo is widened by the *sum* of the
+    stage radii per application (``deep_halo = sweeps * halo``), so
+    intermediate fields live in VMEM and never round-trip HBM.
+
+    Fusability: between stages, window ghosts must be restored to the
+    boundary extension of the *next* stage tile-locally.  The fill and
+    mirror modes (zero / constant / reflect) have tile-local closed
+    forms at any depth; ``periodic`` ghosts instead evolve correctly *on
+    their own* — but only while they hold the periodic extension, i.e.
+    while **every** stage is periodic.  A chain mixing periodic with
+    non-periodic stages therefore cannot fuse (``fusable`` is False) and
+    lowers to staged per-stage execution instead.
+    """
+
+    name: str
+    stages: tuple[StencilSpec, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "stages", tuple(self.stages))
+        if not self.stages:
+            raise ValueError("pipeline needs at least one stage")
+        ndim = self.stages[0].ndim
+        for s in self.stages:
+            if not isinstance(s, StencilSpec):
+                raise TypeError(f"pipeline stage {s!r} is not a StencilSpec")
+            if s.ndim != ndim:
+                raise ValueError(
+                    f"stage {s.name!r} ndim {s.ndim} != pipeline ndim {ndim}")
+
+    @property
+    def ndim(self) -> int:
+        return self.stages[0].ndim
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def stage_names(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.stages)
+
+    @property
+    def halo(self) -> tuple[int, ...]:
+        """Per-dimension halo of one full application: the *sum* of the
+        stage radii (each stage consumes its own layer of the window)."""
+        return tuple(sum(s.halo[d] for s in self.stages)
+                     for d in range(self.ndim))
+
+    @property
+    def boundary_modes(self) -> tuple[str, ...]:
+        return tuple(s.boundary_mode for s in self.stages)
+
+    @property
+    def boundary_mode(self) -> str:
+        """Stage 0's mode — the *initial* window extension (between-stage
+        ghosts are restored per the consuming stage's own mode)."""
+        return self.stages[0].boundary_mode
+
+    @property
+    def boundary_value(self) -> float:
+        return self.stages[0].boundary_value
+
+    @property
+    def fusable(self) -> bool:
+        """Whether the chain admits tile-local fused execution (see the
+        class docstring): no periodic stage, or all stages periodic."""
+        modes = set(self.boundary_modes)
+        return "periodic" not in modes or modes == {"periodic"}
+
+    @property
+    def n_taps(self) -> int:
+        return sum(s.n_taps for s in self.stages)
+
+    def flops_per_point(self) -> int:
+        """Dense MAC flops of one full application (sum over stages)."""
+        return sum(s.flops_per_point() for s in self.stages)
+
+    def structured_flops_per_point(self) -> int:
+        return sum(s.structured_flops_per_point() for s in self.stages)
+
+    def with_boundary(self, boundary: str) -> "StencilPipeline":
+        """Every stage re-based onto ``boundary`` (validated per stage)."""
+        return dataclasses.replace(
+            self, stages=tuple(s.with_boundary(boundary)
+                               for s in self.stages))
+
+
+def as_stages(spec) -> tuple[StencilSpec, ...]:
+    """The stage chain of ``spec``: its own stages for a
+    :class:`StencilPipeline`, the 1-tuple ``(spec,)`` for a plain
+    :class:`StencilSpec` — so executors can treat both uniformly."""
+    if isinstance(spec, StencilPipeline):
+        return spec.stages
+    return (spec,)
+
+
 def _star(ndim: int, radius: int, center: float, arm: float) -> tuple[Tap, ...]:
     taps: list[Tap] = [((0,) * ndim, center)]
     for d in range(ndim):
@@ -460,10 +567,45 @@ def advect2d(cy: float = 0.2, cx: float = 0.3) -> StencilSpec:
         boundary="periodic")
 
 
+def reaction_diffusion2d(d: float = 0.125, k: float = 0.0625,
+                         c: float = 0.03125) -> StencilPipeline:
+    """Operator-split linearized reaction–diffusion on a no-flux plate.
+
+    Stage 1 (``rd_diffuse``) is explicit diffusion ``u + d·Δu`` (5-point
+    star); stage 2 (``rd_react``) the reaction step linearized about the
+    homogeneous state — decay ``-k·u`` plus a weak nearest-neighbor
+    coupling ``c`` (the inhibitor cross-diffusion surrogate).  Both
+    stages use ``reflect`` walls (zero-flux Neumann), so the chain is
+    fusable; the default coefficients are exact binary rationals, which
+    keeps f64 bit-identity assertions sharp.
+    """
+    diffuse = StencilSpec("rd_diffuse", 2, _star(2, 1, 1.0 - 4 * d, d),
+                          boundary="reflect")
+    react = StencilSpec("rd_react", 2, _star(2, 1, 1.0 - k - 4 * c, c),
+                        boundary="reflect")
+    return StencilPipeline("reaction_diffusion2d", (diffuse, react))
+
+
+def advect_diffuse2d(cy: float = 0.2, cx: float = 0.3,
+                     d: float = 0.125) -> StencilPipeline:
+    """Upwind advection then diffusion on a periodic torus — the
+    homogeneous-periodic pipeline (fusable: the periodic invariant holds
+    across heterogeneous taps, see :class:`StencilPipeline`)."""
+    diffuse = StencilSpec("ad_diffuse", 2, _star(2, 1, 1.0 - 4 * d, d),
+                          boundary="periodic")
+    return StencilPipeline("advect_diffuse2d", (advect2d(cy, cx), diffuse))
+
+
 PAPER_STENCILS: Mapping[str, StencilSpec] = {
     s.name: s
     for s in (jacobi1d(), seven_point_1d(), jacobi2d(), blur2d(), heat3d(),
               star33_3d())
+}
+
+#: The shipped multi-stage workloads, served and benchmarked by name
+#: exactly like :data:`PAPER_STENCILS`.
+PAPER_PIPELINES: Mapping[str, StencilPipeline] = {
+    p.name: p for p in (reaction_diffusion2d(), advect_diffuse2d())
 }
 
 # Table 3 domain sizes: dataset level -> {ndim: shape}.

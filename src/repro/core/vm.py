@@ -117,18 +117,41 @@ class SpuVM:
         return g
 
 
+def _merge_counters(parts: list[SpuCounters]) -> SpuCounters:
+    total = SpuCounters()
+    for c in parts:
+        for f in dataclasses.fields(SpuCounters):
+            setattr(total, f.name,
+                    getattr(total, f.name) + getattr(c, f.name))
+    return total
+
+
 def execute_plan(plan, grid: np.ndarray,
                  iters: int | None = None) -> tuple[np.ndarray, SpuCounters]:
     """Thin SPU-VM executor of one lowered
     :class:`~repro.core.plan.ExecutionPlan`: runs the plan's assembled
     :class:`~repro.core.isa.Program` for ``iters`` (default
     ``plan.sweeps``) applications, serving out-of-grid stream elements
-    per the plan's boundary mode (ghost strategy ``"stream"``)."""
+    per the plan's boundary mode (ghost strategy ``"stream"``).
+
+    A pipeline plan carries a
+    :class:`~repro.core.isa.PipelineProgram`: the host re-broadcasts
+    each stage's instruction buffer in turn (one :class:`SpuVM` per
+    stage program), each chain application dispatching the stage
+    programs back-to-back; the returned counters are the aggregate over
+    every stage dispatch."""
     if plan.backend != "vm":
         raise ValueError(f"not a vm plan: backend={plan.backend!r}")
+    n = plan.sweeps if iters is None else iters
+    if plan.is_pipeline:
+        vms = [SpuVM(p) for p in plan.program.stages]
+        g = np.asarray(grid)
+        for _ in range(n):
+            for vm in vms:
+                g = vm.run(g)
+        return g, _merge_counters([vm.counters for vm in vms])
     vm = SpuVM(plan.program)
-    out = vm.run_iterations(np.asarray(grid),
-                            plan.sweeps if iters is None else iters)
+    out = vm.run_iterations(np.asarray(grid), n)
     return out, vm.counters
 
 

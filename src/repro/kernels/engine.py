@@ -79,7 +79,7 @@ from repro.core import plan as _plan
 from repro.core import ref as _ref
 from repro.core import perfmodel as _pm
 from repro.core.plan import resolve_interpret  # canonical auto-detect
-from repro.core.stencil import StencilSpec, factor_taps
+from repro.core.stencil import StencilPipeline, StencilSpec, factor_taps
 
 # Tile defaulting/validation is a lowering decision and lives in
 # repro.core.plan; re-exported here for the existing call sites.
@@ -140,6 +140,47 @@ def _kernel(x_ref, org_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
         structure=structure).astype(o_ref.dtype)
 
 
+def _materialize_window(x, s_true, win, grid_shape, mode, value):
+    """In-kernel ghost materialization for the pad-free fetch: turn the
+    fetched block ``x`` into the window spanning global coordinates
+    ``[s_true[d], s_true[d]+win[d])`` per dim with out-of-grid positions
+    holding the boundary ``mode``'s extension — bitwise what
+    ``ref.pad_boundary`` would have put there.
+
+    Fill/mirror modes arrive as a clamped fetch (the BlockSpec start was
+    clipped into the grid): a per-axis realign gather restores window
+    alignment, then ghosts take the fill value (zero/constant) or the
+    in-window mirror source (reflect).  Periodic arrives as the *whole*
+    unpadded grid and the window is assembled by a per-axis wrap gather
+    ``grid[(g0 + j) mod N]`` — the exact periodic extension at any depth.
+    Shared by the single-spec and pipeline pad-free kernels.
+    """
+    ndim = len(win)
+    if mode == "periodic":
+        for d in range(ndim):
+            idx = (s_true[d] + jnp.arange(win[d], dtype=jnp.int32)) \
+                % grid_shape[d]
+            x = jnp.take(x, idx, axis=d)
+        return x
+    for d in range(ndim):
+        s_clip = jnp.clip(s_true[d], 0, grid_shape[d] - win[d])
+        idx = jnp.clip(s_true[d] - s_clip
+                       + jnp.arange(win[d], dtype=jnp.int32),
+                       0, win[d] - 1)
+        x = jnp.take(x, idx, axis=d)
+    if mode in ("zero", "constant"):
+        valid = None
+        for d in range(ndim):
+            g = s_true[d] + jax.lax.broadcasted_iota(jnp.int32, win, d)
+            vd = (g >= 0) & (g < grid_shape[d])
+            valid = vd if valid is None else valid & vd
+        fill = jnp.asarray(value if mode == "constant" else 0.0, x.dtype)
+        return jnp.where(valid, x, fill)
+    for d in range(ndim):                       # reflect
+        x = _ref.reflect_gather(x, d, s_true[d], grid_shape[d], win[d])
+    return x
+
+
 def _padfree_kernel(x_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
                     acc_dtype, mode, value, structure):
     """Pad-free variant: the fetched block comes straight from the
@@ -160,31 +201,7 @@ def _padfree_kernel(x_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
     wide = tuple(sweeps * h for h in halo)
     win = tuple(t + 2 * w for t, w in zip(tile, wide))
     s_true = tuple(pl.program_id(d) * tile[d] - wide[d] for d in range(ndim))
-    x = x_ref[...]
-    if mode == "periodic":
-        for d in range(ndim):
-            idx = (s_true[d] + jnp.arange(win[d], dtype=jnp.int32)) \
-                % grid_shape[d]
-            x = jnp.take(x, idx, axis=d)
-    else:
-        for d in range(ndim):
-            s_clip = jnp.clip(s_true[d], 0, grid_shape[d] - win[d])
-            idx = jnp.clip(s_true[d] - s_clip
-                           + jnp.arange(win[d], dtype=jnp.int32),
-                           0, win[d] - 1)
-            x = jnp.take(x, idx, axis=d)
-        if mode in ("zero", "constant"):
-            valid = None
-            for d in range(ndim):
-                g = s_true[d] + jax.lax.broadcasted_iota(jnp.int32, win, d)
-                vd = (g >= 0) & (g < grid_shape[d])
-                valid = vd if valid is None else valid & vd
-            fill = jnp.asarray(value if mode == "constant" else 0.0, x.dtype)
-            x = jnp.where(valid, x, fill)
-        else:                                   # reflect
-            for d in range(ndim):
-                x = _ref.reflect_gather(x, d, s_true[d], grid_shape[d],
-                                        win[d])
+    x = _materialize_window(x_ref[...], s_true, win, grid_shape, mode, value)
     starts = tuple(pl.program_id(d) * tile[d] for d in range(ndim))
     o_ref[...] = _ref.masked_window_sweeps(
         x, taps, halo, tile, sweeps, starts, grid_shape,
@@ -363,14 +380,219 @@ def stencil_apply(spec: StencilSpec, grid: jax.Array,
         f"(expected ndim or ndim+1 for a batched grid)")
 
 
+# ---------------------------------------------------------------------------
+# Fused multi-stencil pipelines (StencilPipeline)
+# ---------------------------------------------------------------------------
+def _pipeline_kernel(x_ref, org_ref, o_ref, *, stages, tile, sweeps,
+                     grid_shape, acc_dtype):
+    """Pipeline analogue of :func:`_kernel`: the window enters with
+    ``sweeps * H`` ghost layers (``H`` = per-dim sum of stage radii)
+    holding stage 0's boundary extension; the shared fused-chain core
+    (:func:`repro.core.ref.masked_window_pipeline`) consumes each
+    stage's radius in turn and restores between-stage ghosts per the
+    *next* stage's mode — bit-identical to the chained oracle in f64."""
+    ndim = len(tile)
+    starts = tuple(org_ref[d] + pl.program_id(d) * tile[d]
+                   for d in range(ndim))
+    o_ref[...] = _ref.masked_window_pipeline(
+        x_ref[...], stages, tile, sweeps, starts, grid_shape,
+        acc_dtype).astype(o_ref.dtype)
+
+
+def _padfree_pipeline_kernel(x_ref, o_ref, *, stages, tile, sweeps,
+                             grid_shape, acc_dtype, mode, value):
+    """Pad-free pipeline kernel: materialize the chain's widened window
+    in-kernel with stage 0's extension (:func:`_materialize_window`),
+    then run the fused-chain core.  ``mode`` is stage 0's — for periodic
+    it implies *every* stage is periodic (mixed chains never lower to a
+    fused kernel)."""
+    ndim = len(tile)
+    big_halo = tuple(sum(s.halo[d] for s in stages) for d in range(ndim))
+    wide = tuple(sweeps * h for h in big_halo)
+    win = tuple(t + 2 * w for t, w in zip(tile, wide))
+    s_true = tuple(pl.program_id(d) * tile[d] - wide[d] for d in range(ndim))
+    x = _materialize_window(x_ref[...], s_true, win, grid_shape, mode, value)
+    starts = tuple(pl.program_id(d) * tile[d] for d in range(ndim))
+    o_ref[...] = _ref.masked_window_pipeline(
+        x, stages, tile, sweeps, starts, grid_shape,
+        acc_dtype).astype(o_ref.dtype)
+
+
+def pipeline_window_sweep(pipeline: StencilPipeline, window: jax.Array,
+                          out_shape: Sequence[int],
+                          origin,
+                          grid_shape: Sequence[int],
+                          tile: Sequence[int] | int | None = None,
+                          sweeps: int = 1,
+                          interpret: bool | None = None) -> jax.Array:
+    """``sweeps`` fused chain applications to a block that already
+    carries its ``sweeps * H`` halo (``H`` = summed stage radii) filled
+    with stage 0's boundary extension — the pipeline analogue of
+    :func:`stencil_window_sweep`, and the shard-local entry point of the
+    distributed sum-of-radii deep-halo path."""
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    if not pipeline.fusable:
+        raise ValueError(
+            f"{pipeline.name}: mixed periodic/non-periodic stages cannot "
+            "run fused; lower the pipeline and use the staged plan")
+    interpret = resolve_interpret(interpret)
+    tile = _normalize_tile(pipeline, tile)
+    out_shape = tuple(out_shape)
+    grid_shape = tuple(int(n) for n in grid_shape)
+    wide = tuple(sweeps * h for h in pipeline.halo)
+    want = tuple(n + 2 * w for n, w in zip(out_shape, wide))
+    if window.shape != want:
+        raise ValueError(
+            f"window shape {window.shape} != out_shape + 2*sweeps*H "
+            f"{want}")
+
+    pads = tuple(-n % t for n, t in zip(out_shape, tile))
+    xp = jnp.pad(window, [(0, p) for p in pads])
+    grid_dims = tuple((n + p) // t for n, p, t in zip(out_shape, pads, tile))
+    padded = tuple(n + p for n, p in zip(out_shape, pads))
+    org = jnp.asarray(origin, jnp.int32)
+
+    kernel = functools.partial(
+        _pipeline_kernel, stages=pipeline.stages, tile=tile, sweeps=sweeps,
+        grid_shape=grid_shape, acc_dtype=_acc_dtype(window.dtype))
+
+    def in_map(*ids):
+        return tuple(i * t for i, t in zip(ids, tile))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid_dims,
+        in_specs=[element_blockspec(
+            tuple(t + 2 * w for t, w in zip(tile, wide)), in_map),
+            pl.BlockSpec((pipeline.ndim,), lambda *ids: (0,))],
+        out_specs=pl.BlockSpec(tile, lambda *ids: ids),
+        out_shape=jax.ShapeDtypeStruct(padded, window.dtype),
+        interpret=interpret,
+    )(xp, org)
+    return out[tuple(slice(0, n) for n in out_shape)]
+
+
+def pipeline_sweep(pipeline: StencilPipeline, grid: jax.Array,
+                   tile: Sequence[int] | int | None = None,
+                   sweeps: int = 1,
+                   interpret: bool | None = None,
+                   strategy: str | None = None) -> jax.Array:
+    """``sweeps`` fused applications of a stage chain: one HBM read of
+    the ``sweeps * H``-widened window and one write per tile — every
+    intermediate stage field stays in VMEM, never round-tripping HBM.
+    Bit-identical in f64 to ``sweeps`` chained
+    :func:`repro.core.ref.apply_pipeline` calls.
+
+    Strategy resolution mirrors :func:`stencil_sweep` (pad-free clamped
+    fetch; padded-window fallback for tiny grids and out-of-budget
+    periodic chains).  A non-fusable chain (mixed periodic with
+    non-periodic stages — between-stage ghost restoration is not
+    tile-local) executes ``"staged"``: per-stage single-sweep kernels,
+    chained semantics at per-stage traffic.
+    """
+    if grid.ndim != pipeline.ndim:
+        raise ValueError(
+            f"grid rank {grid.ndim} != pipeline ndim {pipeline.ndim}")
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    interpret = resolve_interpret(interpret)
+    tile = _normalize_tile(pipeline, tile)
+    if strategy is None:
+        strategy = ("staged" if not pipeline.fusable
+                    else _plan.ghost_strategy_for(
+                        pipeline, grid.shape, grid.dtype.itemsize, sweeps,
+                        tile,
+                        periodic_budget_bytes=_PERIODIC_WHOLE_GRID_BYTES))
+    if strategy == "staged":
+        out = grid
+        for _ in range(sweeps):
+            for stage in pipeline.stages:
+                out = stencil_sweep(stage, out, tile=tile, sweeps=1,
+                                    interpret=interpret)
+        return out
+    if not pipeline.fusable:
+        raise ValueError(
+            f"{pipeline.name}: mixed periodic/non-periodic stages cannot "
+            f"run fused (requested strategy {strategy!r}); use "
+            "strategy='staged'")
+    big_halo = pipeline.halo
+    wide = tuple(sweeps * h for h in big_halo)
+    win = tuple(t + 2 * w for t, w in zip(tile, wide))
+    if strategy == "padded-window":
+        window = _ref.pad_boundary(grid, wide, pipeline.boundary_mode,
+                                   pipeline.boundary_value)
+        return pipeline_window_sweep(
+            pipeline, window, grid.shape, (0,) * pipeline.ndim, grid.shape,
+            tile=tile, sweeps=sweeps, interpret=interpret)
+
+    grid_dims = tuple(-(-n // t) for n, t in zip(grid.shape, tile))
+    padded = tuple(d * t for d, t in zip(grid_dims, tile))
+    n_shape = grid.shape
+
+    kernel = functools.partial(
+        _padfree_pipeline_kernel, stages=pipeline.stages, tile=tile,
+        sweeps=sweeps, grid_shape=n_shape,
+        acc_dtype=_acc_dtype(grid.dtype), mode=pipeline.boundary_mode,
+        value=pipeline.boundary_value)
+
+    if pipeline.boundary_mode == "periodic":
+        in_spec = element_blockspec(n_shape,
+                                    lambda *ids: (0,) * pipeline.ndim)
+    else:
+        def in_map(*ids):
+            return tuple(
+                jnp.clip(i * t - w, 0, n - wn)
+                for i, t, w, n, wn in zip(ids, tile, wide, n_shape, win))
+        in_spec = element_blockspec(win, in_map)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid_dims,
+        in_specs=[in_spec],
+        out_specs=pl.BlockSpec(tile, lambda *ids: ids),
+        out_shape=jax.ShapeDtypeStruct(padded, grid.dtype),
+        interpret=interpret,
+    )(grid)
+    if padded == n_shape:
+        return out
+    return out[tuple(slice(0, n) for n in n_shape)]
+
+
+def pipeline_apply(pipeline: StencilPipeline, grid: jax.Array,
+                   tile: Sequence[int] | int | None = None,
+                   sweeps: int = 1,
+                   interpret: bool | None = None,
+                   strategy: str | None = None) -> jax.Array:
+    """Pipeline analogue of :func:`stencil_apply`: one grid, or a
+    leading batch dim vmapped over one shared fused-chain kernel."""
+    interpret = resolve_interpret(interpret)
+    if grid.ndim == pipeline.ndim:
+        return pipeline_sweep(pipeline, grid, tile=tile, sweeps=sweeps,
+                              interpret=interpret, strategy=strategy)
+    if grid.ndim == pipeline.ndim + 1:
+        fn = functools.partial(pipeline_sweep, pipeline, tile=tile,
+                               sweeps=sweeps, interpret=interpret,
+                               strategy=strategy)
+        return jax.vmap(fn)(grid)
+    raise ValueError(
+        f"grid rank {grid.ndim} incompatible with pipeline ndim "
+        f"{pipeline.ndim} (expected ndim or ndim+1 for a batched grid)")
+
+
 def execute_plan(plan, grid: jax.Array) -> jax.Array:
     """Thin Pallas executor of one lowered
     :class:`~repro.core.plan.ExecutionPlan`: one fused block of
     ``plan.sweeps`` applications with the plan's resolved tile and
     ghost strategy (an optional leading batch dim vmaps over one shared
-    kernel, exactly as :func:`stencil_apply`)."""
+    kernel, exactly as :func:`stencil_apply`).  Pipeline plans run the
+    fused-chain kernel."""
     if plan.backend != "pallas":
         raise ValueError(f"not a pallas plan: backend={plan.backend!r}")
+    if plan.is_pipeline:
+        return pipeline_apply(plan.spec, grid, tile=plan.tile,
+                              sweeps=plan.sweeps, interpret=plan.interpret,
+                              strategy=plan.ghost_strategy)
     return stencil_apply(plan.spec, grid, tile=plan.tile,
                          sweeps=plan.sweeps, interpret=plan.interpret,
                          strategy=plan.ghost_strategy)
@@ -452,4 +674,51 @@ def hbm_traffic(spec: StencilSpec, shape: Sequence[int],
         "halo_overhead": n_tiles * window_bytes(sweeps) / fused,
         "pad_bytes_unfused": float(sweeps * pad_copy_bytes(1)),
         "legacy_fused_bytes": float(fused + pad_copy_bytes(sweeps)),
+    }
+
+
+def hbm_pipeline_traffic(pipeline: StencilPipeline, shape: Sequence[int],
+                         tile: Sequence[int] | None = None,
+                         sweeps: int = 1,
+                         itemsize: int = 4) -> dict[str, float]:
+    """Modeled HBM bytes of ``sweeps`` fused chain applications vs the
+    stage-by-stage baseline.
+
+    ``fused``  — one fused-chain kernel invocation: each tile reads the
+                 ``sweeps * H``-widened window once (``H`` = per-dim sum
+                 of stage radii) and writes one tile — every
+                 intermediate stage field lives in VMEM.
+    ``staged`` — the per-stage chain at its *best*: each stage as one
+                 pad-free single-sweep kernel per application, so each
+                 of the ``sweeps * n_stages`` stage passes reads its own
+                 (stage-radius) windows and writes its intermediate
+                 field to HBM.  This deliberately under-charges the
+                 baseline (no pad round-trips), so the reported
+                 ``reduction`` is a lower bound on the fusion win.
+    ``intermediate_bytes`` — the HBM round-trips the fusion deletes: the
+                 ``sweeps * n_stages - 1`` intermediate field writes +
+                 reads the staged chain pays between stage passes.
+    """
+    if tile is None:
+        tile = DEFAULT_TILES[pipeline.ndim]
+    tile = tuple(tile)
+    n_tiles = math.prod(-(-n // t) for n, t in zip(shape, tile))
+    out_b = math.prod(tile) * itemsize
+
+    def window_bytes(layers: Sequence[int]) -> int:
+        return math.prod(t + 2 * w for t, w in zip(tile, layers)) * itemsize
+
+    fused = n_tiles * (window_bytes(tuple(sweeps * h
+                                          for h in pipeline.halo)) + out_b)
+    staged = sweeps * sum(
+        n_tiles * (window_bytes(stage.halo) + out_b)
+        for stage in pipeline.stages)
+    grid_b = math.prod(shape) * itemsize
+    passes = sweeps * pipeline.n_stages
+    return {
+        "fused_bytes": float(fused),
+        "staged_bytes": float(staged),
+        "reduction": staged / fused,
+        "intermediate_bytes": float(2 * (passes - 1) * grid_b),
+        "n_stage_passes": float(passes),
     }

@@ -89,6 +89,30 @@ def autotune(spec: StencilSpec, shape: tuple[int, ...], sweeps: int = 1,
     return TuneResult(best, cost, tuple(scored))
 
 
+@functools.lru_cache(maxsize=512)
+def autotune_pipeline(pipeline, shape: tuple[int, ...], sweeps: int = 1,
+                      itemsize: int = 4) -> TuneResult:
+    """Best tile for a fused :class:`~repro.core.stencil.StencilPipeline`
+    chain: same candidate lists, ranked by
+    :func:`repro.core.perfmodel.pallas_pipeline_tile_cost` (summed-halo
+    window traffic, per-stage structured compute at the exact
+    element-layer schedule).  Memoized on the full pipeline — stage
+    order, per-stage boundary and structure all participate."""
+    shape = tuple(shape)
+    scored = sorted(
+        ((tile, pm.pallas_pipeline_tile_cost(pipeline, shape, tile,
+                                             sweeps=sweeps,
+                                             itemsize=itemsize))
+         for tile in candidate_tiles(pipeline.ndim, shape)),
+        key=lambda tc: tc[1])
+    best, cost = scored[0]
+    if math.isinf(cost):
+        raise ValueError(
+            f"no candidate tile fits VMEM for {pipeline.name} "
+            f"sweeps={sweeps}")
+    return TuneResult(best, cost, tuple(scored))
+
+
 def autotune_measured(spec: StencilSpec, grid, sweeps: int = 1,
                       top_k: int = 3, reps: int = 2,
                       interpret: bool | None = None) -> TuneResult:

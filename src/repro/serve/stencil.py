@@ -33,16 +33,21 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import plan as _plan
-from repro.core.stencil import (PAPER_STENCILS, StencilSpec, advect1d,
+from repro.core.stencil import (PAPER_PIPELINES, PAPER_STENCILS,
+                                StencilPipeline, StencilSpec, advect1d,
                                 advect2d)
 
 
-def default_specs() -> dict[str, StencilSpec]:
-    """The out-of-the-box serving catalogue: the paper's six stencils
-    plus the periodic advection workloads."""
-    specs = dict(PAPER_STENCILS)
+def default_specs() -> dict[str, StencilSpec | StencilPipeline]:
+    """The out-of-the-box serving catalogue: the paper's six stencils,
+    the periodic advection workloads, and the fused multi-stage
+    pipelines (reaction–diffusion, advect–diffuse) — pipeline requests
+    bucket and batch exactly like single-spec requests, each bucket
+    running the whole fused chain in one vmapped call."""
+    specs: dict[str, StencilSpec | StencilPipeline] = dict(PAPER_STENCILS)
     for s in (advect1d(), advect2d()):
         specs[s.name] = s
+    specs.update(PAPER_PIPELINES)
     return specs
 
 
@@ -91,7 +96,9 @@ class StencilServer:
     remainder plans from the cache).
     """
 
-    def __init__(self, specs: Mapping[str, StencilSpec] | None = None, *,
+    def __init__(self,
+                 specs: Mapping[str, StencilSpec | StencilPipeline]
+                 | None = None, *,
                  backend: str = "ref", sweeps: int = 1,
                  tile=None, interpret: bool | None = None):
         if sweeps < 1:
@@ -102,7 +109,7 @@ class StencilServer:
         self.tile_request = _plan.canonical_tile_request(tile)
         self.interpret = _plan.resolve_interpret(interpret)
 
-    def register(self, spec: StencilSpec) -> None:
+    def register(self, spec: StencilSpec | StencilPipeline) -> None:
         """Make ``spec`` servable under ``spec.name``."""
         self.specs[spec.name] = spec
 
@@ -160,12 +167,18 @@ class StencilServer:
             out = np.asarray(run(stacked, iters=iters))  # one transfer back
             bucket_stats.append({
                 "spec": spec.name, "shape": tuple(stacked.shape[1:]),
+                "dtype": np.dtype(stacked.dtype).name,
                 "iters": iters, "size": len(idxs),
                 "seconds": time.perf_counter() - tb,
             })
             points += int(stacked.size)
             for j, i in enumerate(idxs):
                 results[i] = out[j]
+        # Per-bucket latency reporting must not depend on dict insertion
+        # order (= request arrival order): sort on the bucket identity so
+        # two serves of the same request multiset report identically.
+        bucket_stats.sort(
+            key=lambda b: (b["spec"], b["shape"], b["dtype"], b["iters"]))
         seconds = time.perf_counter() - t0
         stats = ServeStats(
             n_requests=len(requests), n_buckets=len(bucket_stats),

@@ -213,6 +213,91 @@ def test_remainder_plans_come_from_cache(rng):
 
 
 # ---------------------------------------------------------------------------
+# Pipeline plans live in the same cache
+# ---------------------------------------------------------------------------
+def test_pipeline_cache_key_stage_order_and_boundary_distinct():
+    """Pipelines keyed on their full stage tuple: permuting the stage
+    order or any single stage's boundary is a different plan (same
+    pipeline *name* throughout, so distinctness comes from the stages,
+    not the label)."""
+    from repro.core import StencilPipeline
+    a = PAPER_STENCILS["jacobi2d"].with_boundary("reflect")
+    b = PAPER_STENCILS["blur2d"].with_boundary("reflect")
+    perms = [
+        StencilPipeline("perm", (a, b)),
+        StencilPipeline("perm", (b, a)),                       # order swap
+        StencilPipeline("perm", (a.with_boundary("zero"), b)),
+        StencilPipeline("perm", (a, b.with_boundary("zero"))),
+        StencilPipeline("perm", (a.with_boundary("zero"),
+                                 b.with_boundary("zero"))),
+    ]
+    s0 = _stats()
+    plans = [lower(p, (24, 40), jnp.float64, backend="ref", sweeps=1)
+             for p in perms]
+    s1 = _stats()
+    assert len({id(p) for p in plans}) == len(plans)
+    assert s1["lowers"] == s0["lowers"] + len(perms)
+    # same stages again -> pure hit, the very same cached object
+    again = lower(StencilPipeline("perm", (a, b)), (24, 40), jnp.float64,
+                  backend="ref", sweeps=1)
+    s2 = _stats()
+    assert again is plans[0]
+    assert s2["lowers"] == s1["lowers"]
+    assert s2["hits"] == s1["hits"] + 1
+
+
+def test_cache_eviction_lru_with_pipeline_plans_interleaved():
+    """Pipeline and single-spec plans share one LRU: their keys hash
+    side by side and evict in pure recency order regardless of kind."""
+    from repro.core import StencilPipeline
+    spec = PAPER_STENCILS["jacobi2d"]
+    pipe = StencilPipeline("evict_p", (spec, spec.with_boundary("reflect")))
+    k_spec = planmod.plan_key(spec, (16, 16), jnp.float32, "ref", 1,
+                              None, False)
+    k_pipe = planmod.plan_key(pipe, (16, 16), jnp.float32, "ref", 1,
+                              None, False)
+    k_pipe2 = planmod.plan_key(pipe, (16, 16), jnp.float32, "ref", 2,
+                               None, False)
+    assert len({k_spec, k_pipe, k_pipe2}) == 3
+    cache = PlanCache(maxsize=2)
+    cache.put(k_spec, "spec-plan")
+    cache.put(k_pipe, "pipe-plan")
+    assert cache.get(k_spec) == "spec-plan"      # refresh: pipe is LRU
+    cache.put(k_pipe2, "pipe-plan-2")            # evicts k_pipe
+    assert cache.keys() == [k_spec, k_pipe2]
+    assert cache.get(k_pipe) is None
+    assert cache.evictions == 1
+    # and the other way round: the single-spec plan evicts first when
+    # the pipeline plans are the recent ones
+    cache.get(k_pipe2)                           # spec is LRU now
+    cache.put(k_pipe, "pipe-plan")               # evicts k_spec
+    assert cache.keys() == [k_pipe2, k_pipe]
+    assert cache.evictions == 2
+
+
+def test_second_identical_pipeline_engine_zero_lowers_zero_autotunes(rng):
+    from repro.core import reaction_diffusion2d
+    pipe = reaction_diffusion2d()
+    g = jnp.asarray(rng.standard_normal((24, 40)), jnp.float32)
+    eng1 = CasperEngine(pipe, backend="pallas", sweeps=2, tile="auto")
+    out1 = eng1.run(g, iters=5)                  # q=2, r=1: remainder too
+    s0 = _stats()
+    eng2 = CasperEngine(pipe, backend="pallas", sweeps=2, tile="auto")
+    out2 = eng2.run(g, iters=5)
+    s1 = _stats()
+    assert s1["lowers"] == s0["lowers"], "second pipeline engine re-lowered"
+    assert s1["autotune_calls"] == s0["autotune_calls"], \
+        "second pipeline engine re-autotuned"
+    assert eng2._run_jit is eng1._run_jit
+    p = eng2.plan_for(g.shape, g.dtype)
+    s2 = _stats()
+    assert s2["hits"] == s1["hits"] + 1
+    assert s2["lowers"] == s1["lowers"]
+    assert p.is_pipeline and p is eng1.plan_for(g.shape, g.dtype)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
 # All four backends consume a plan
 # ---------------------------------------------------------------------------
 def test_ref_backend_executes_plan(rng):

@@ -89,6 +89,69 @@ def test_request_validation(rng):
         StencilServer(sweeps=0)
 
 
+def test_serve_pipeline_requests_bucket_and_match_oracle(rng):
+    """Pipelines are first-class serve specs: requests naming a paper
+    pipeline bucket exactly like single-spec requests (same name + shape
+    + dtype + iters coalesce) and each result matches the chained
+    per-stage oracle."""
+    from repro.core import run_pipeline
+    server = StencilServer(backend="ref", sweeps=2)
+    assert "reaction_diffusion2d" in server.specs     # PAPER_PIPELINES
+    g = lambda shape: rng.standard_normal(shape).astype(np.float32)
+    reqs = [
+        StencilRequest("reaction_diffusion2d", g((16, 24)), 4),
+        StencilRequest("jacobi2d", g((16, 24)), 4),
+        StencilRequest("reaction_diffusion2d", g((16, 24)), 4),  # bucket #0
+        StencilRequest("advect_diffuse2d", g((16, 32)), 3),
+        StencilRequest("reaction_diffusion2d", g((16, 24)), 6),  # new iters
+    ]
+    results, stats = server.serve(reqs)
+    assert stats.n_requests == 5
+    assert stats.n_buckets == 4
+    assert sum(b["size"] for b in stats.buckets) == 5
+    pipe_buckets = [b for b in stats.buckets
+                    if b["spec"] == "reaction_diffusion2d"]
+    assert sorted((b["iters"], b["size"]) for b in pipe_buckets) \
+        == [(4, 2), (6, 1)]
+    for req, got in zip(reqs, results):
+        spec = server.specs[req.spec_name]
+        if hasattr(spec, "stages"):
+            want = run_pipeline(spec, jnp.asarray(req.grid), req.iters)
+        else:
+            want = cref.run_iterations(spec, jnp.asarray(req.grid),
+                                       req.iters)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, err_msg=req.spec_name)
+
+
+def test_bucket_stats_deterministic_under_arrival_permutation(rng):
+    """The per-bucket report is a function of the request *multiset*,
+    not the arrival order: two serves of the same requests in different
+    orders report identical bucket identities, in identical (sorted)
+    positions."""
+    server = StencilServer(backend="ref", sweeps=1)
+    g = lambda shape: rng.standard_normal(shape).astype(np.float32)
+    reqs = [
+        StencilRequest("reaction_diffusion2d", g((12, 20)), 2),
+        StencilRequest("jacobi2d", g((12, 20)), 2),
+        StencilRequest("jacobi2d", g((12, 20)), 2),
+        StencilRequest("jacobi1d", g((64,)), 3),
+        StencilRequest("reaction_diffusion2d", g((12, 20)), 2),
+    ]
+
+    def identities(stats):
+        return [(b["spec"], b["shape"], b["dtype"], b["iters"], b["size"])
+                for b in stats.buckets]
+
+    _, s1 = server.serve(reqs)
+    _, s2 = server.serve(list(reversed(reqs)))
+    _, s3 = server.serve(reqs[2:] + reqs[:2])
+    assert identities(s1) == identities(s2) == identities(s3)
+    # and the positions themselves are the sorted bucket identities,
+    # never dict insertion order
+    assert identities(s1) == sorted(identities(s1))
+
+
 def test_register_custom_spec(rng):
     from repro.core import StencilSpec
     server = StencilServer(backend="ref", sweeps=1)
