@@ -1,0 +1,264 @@
+"""Layer-2 static plan lint: trace the plan's jitted executor and walk
+the jaxpr (and, for fused pipelines, the compiled HLO via
+:mod:`repro.roofline.hlo_walk`) for properties the layer-1 field checks
+cannot see:
+
+* **de-specialization** — a structured plan whose traced executor emits
+  more ``dynamic_slice`` fetches than its factored tap-op budget
+  (``sweeps * sum_k tap_ops(stage_k)``): the compute core silently fell
+  back to the dense per-tap chain.  This generalizes the one-off jaxpr
+  slice-count guard of ``tests/test_structure.py`` into a real pass.
+* **dtype-contract violations** — any narrowing float
+  ``convert_element_type`` (f64 → f32/bf16/f16) inside an f64 plan:
+  the repo-wide bit-identity contract runs entirely in f64.
+* **cross-stage FMA contraction** — the ``run_plan`` scan composition
+  rolls several fused blocks into one XLA computation, which licenses
+  multiply-add contraction across the carried block boundary (the PR 6
+  fuzz finding, seed 29: scan output matches the eager chain only to
+  ``atol=1e-12``).  Flagged statically as an *info* finding on every
+  scanned f64 plan — it is the documented contract, not a bug.
+* **HBM round-trips** — a fused pipeline must move strictly fewer HBM
+  bytes than its staged per-stage fallback (the whole point of fusion).
+  Both executors are compiled and their optimized HLO walked with the
+  trip-count-aware :func:`repro.roofline.hlo_walk.walk`.
+
+The VM backend is numpy (untraceable) and distributed plans trace under
+a mesh; both are skipped with an info finding.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+from repro.core import plan as _plan
+from repro.core.stencil import factor_taps
+
+from .verify import Finding, Report, summarize_plan
+
+LINT_CHECKS = ("de-specialization", "dtype-contract", "fma-contraction",
+               "hbm-roundtrips")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+def _subjaxprs(v):
+    """Yield every jaxpr nested in an eqn param value: raw ``Jaxpr`` s
+    (e.g. ``pallas_call``'s kernel), ``ClosedJaxpr`` s (scan/while/cond
+    bodies) and containers of either."""
+    if hasattr(v, "eqns"):
+        yield v
+    elif hasattr(v, "jaxpr"):
+        yield from _subjaxprs(v.jaxpr)
+    elif isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _subjaxprs(item)
+
+
+def _walk_eqns(jaxpr):
+    """Depth-first over every eqn of ``jaxpr`` and all nested jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _walk_eqns(sub)
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` in ``jaxpr`` (a ``Jaxpr`` or
+    ``ClosedJaxpr``), recursing into scan/while/cond bodies and
+    ``pallas_call`` kernel jaxprs."""
+    inner = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+    return sum(1 for eqn in _walk_eqns(inner) if eqn.primitive.name == name)
+
+
+def _x64_if_needed(dtype):
+    if np.dtype(dtype).itemsize == 8:
+        from jax.experimental import enable_x64
+        return enable_x64()
+    return contextlib.nullcontext()
+
+
+def trace_plan_jaxpr(plan, iters: int | None = None):
+    """The plan's executor as a ``ClosedJaxpr``: one fused block
+    (``plan.execute``), or ``run_plan`` over ``iters`` total
+    applications (the scan composition) when ``iters`` is given."""
+    import jax
+    if iters is None:
+        def fn(g):
+            return _plan.execute(plan, g)
+    else:
+        def fn(g):
+            return _plan.run_plan(plan, g, iters)
+    with _x64_if_needed(plan.dtype):
+        dummy = np.zeros(plan.shape, np.dtype(plan.dtype))
+        return jax.make_jaxpr(fn)(dummy)
+
+
+# ---------------------------------------------------------------------------
+# The checks
+# ---------------------------------------------------------------------------
+def _stage_slice_budget(stage) -> int:
+    """``dynamic_slice`` budget of ONE application of ``stage``: one
+    fetch per factored tap-op plus the window re-centers — one per
+    application (the shrinking deep-halo window) and, on the factored
+    separable path, one per sequential 1-D axis pass.  Star/dense specs
+    run the dense per-tap chain (``tap_ops == n_taps``, no axis
+    passes).  Anything above this bound means the compute core
+    de-specialized to a denser tap walk."""
+    fz = factor_taps(stage)
+    terms = fz.compute_terms
+    passes = 0 if terms is None else sum(len(t.factors) for t in terms)
+    return fz.tap_ops + passes + 1
+
+
+def slice_budget(plan) -> int:
+    """Upper bound on ``dynamic_slice`` fetches one fused block
+    (``plan.execute``) may emit: the per-stage budget times ``sweeps``
+    applications."""
+    return plan.sweeps * sum(_stage_slice_budget(s) for s in plan.stages)
+
+
+def lint_despecialization(plan, jaxpr=None) -> list[Finding]:
+    if jaxpr is None:
+        jaxpr = trace_plan_jaxpr(plan)
+    budget = slice_budget(plan)
+    n = count_primitive(jaxpr, "dynamic_slice")
+    if n > budget:
+        return [Finding(
+            "de-specialization", "error",
+            f"traced executor emits {n} dynamic_slice fetches; the "
+            f"factored budget is {budget} (sweeps={plan.sweeps}, "
+            f"per-stage budgets "
+            f"{[_stage_slice_budget(s) for s in plan.stages]}) — the "
+            f"compute core de-specialized to a denser tap walk")]
+    return []
+
+
+def lint_dtype(plan, jaxpr=None) -> list[Finding]:
+    if np.dtype(plan.dtype) != np.dtype("float64"):
+        return []
+    if jaxpr is None:
+        jaxpr = trace_plan_jaxpr(plan)
+    inner = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+    narrowings: dict[str, int] = {}
+    for eqn in _walk_eqns(inner):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        old = np.dtype(eqn.invars[0].aval.dtype)
+        new = np.dtype(eqn.params["new_dtype"])
+        if (np.issubdtype(old, np.floating)
+                and np.issubdtype(new, np.floating)
+                and new.itemsize < old.itemsize):
+            key = f"{old.name} -> {new.name}"
+            narrowings[key] = narrowings.get(key, 0) + 1
+    return [Finding(
+        "dtype-contract", "error",
+        f"f64 plan contains {n} narrowing float convert(s) {key}: the "
+        f"f64 bit-identity contract is broken")
+        for key, n in sorted(narrowings.items())]
+
+
+def lint_fma_contraction(plan, iters: int | None = None) -> list[Finding]:
+    """Flag the scan-composition contraction sites statically (info:
+    this is the documented ``atol=1e-12`` contract of ``run_plan``, not
+    a defect — see the PR 6 fuzz corpus, seed 29)."""
+    if np.dtype(plan.dtype) != np.dtype("float64"):
+        return []
+    if iters is None:
+        iters = 2 * plan.sweeps
+    q, _ = plan.decompose(iters)
+    if q < 2:
+        return []
+    jaxpr = trace_plan_jaxpr(plan, iters=iters)
+    n_scans = count_primitive(jaxpr, "scan")
+    if not n_scans:
+        return []
+    apps = plan.sweeps * len(plan.stages)
+    return [Finding(
+        "fma-contraction", "info",
+        f"run_plan(iters={iters}) rolls {q} fused blocks ({apps} "
+        f"applications each) into {n_scans} lax.scan(s): XLA may "
+        f"contract multiply-adds across the carried block boundary, so "
+        f"the scan path is held to atol=1e-12 instead of f64 "
+        f"bit-identity (fuzz corpus seed 29)")]
+
+
+def lint_hbm(plan, staged_fn=None) -> list[Finding]:
+    """Compile one fused block and its staged per-stage fallback and
+    compare HBM bytes counted from the optimized HLO: fusion must move
+    strictly fewer bytes (intermediates staying in VMEM/registers is
+    the whole point).  ``staged_fn`` overrides the fallback executor
+    (the mutation tests pass the fused executor itself to prove the
+    check has teeth)."""
+    from repro.roofline import hlo_walk
+    import jax
+
+    if staged_fn is None:
+        def staged_fn(g):
+            out = g
+            for _ in range(plan.sweeps):
+                for k in range(len(plan.stages)):
+                    out = _plan.execute(plan.stage_plan(k), out)
+            return out
+
+    def fused_fn(g):
+        return _plan.execute(plan, g)
+
+    with _x64_if_needed(plan.dtype):
+        dummy = jax.ShapeDtypeStruct(plan.shape, np.dtype(plan.dtype))
+        fused = hlo_walk.walk_jit(fused_fn, dummy)
+        staged = hlo_walk.walk_jit(staged_fn, dummy)
+    if fused.bytes >= staged.bytes:
+        return [Finding(
+            "hbm-roundtrips", "error",
+            f"fused pipeline moves {fused.bytes:.0f} HBM bytes but its "
+            f"staged per-stage fallback moves {staged.bytes:.0f}: "
+            f"fusion is not eliding the intermediate round-trips")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+def lint_plan(plan, hbm: bool | None = None) -> Report:
+    """Run the full layer-2 lint over ``plan`` and return a
+    :class:`~repro.analysis.verify.Report`.
+
+    ``hbm=None`` compiles the HBM round-trip comparison exactly when it
+    is meaningful: a fused single-device Pallas pipeline with a
+    non-periodic boundary.  (The staged fallback of a ``ref`` pipeline
+    is *defined* as the chain; distributed plans compile under a mesh;
+    and the periodic pad-free kernel blocks the whole grid in VMEM, so
+    the CPU-interpret HLO byte count — which cannot see the VMEM/HBM
+    split — is not an HBM proxy for it.)
+    """
+    findings: list[Finding] = []
+    if plan.backend == "vm":
+        findings.append(Finding(
+            "jaxpr-lint", "info",
+            "vm backend executes in numpy; jaxpr lint skipped (the SPU "
+            "program is verified by the layer-1 program check)"))
+        return Report(summarize_plan(plan), ("jaxpr-lint",),
+                      tuple(findings))
+    if plan.is_distributed:
+        findings.append(Finding(
+            "jaxpr-lint", "info",
+            "distributed plan: jaxpr lint runs on the single-device "
+            "lowering (trace the shard-local path under its mesh to "
+            "inspect collectives)"))
+        return Report(summarize_plan(plan), ("jaxpr-lint",),
+                      tuple(findings))
+
+    jaxpr = trace_plan_jaxpr(plan)
+    findings += lint_despecialization(plan, jaxpr)
+    findings += lint_dtype(plan, jaxpr)
+    findings += lint_fma_contraction(plan)
+    if hbm is None:
+        hbm = (plan.is_pipeline and plan.fused
+               and plan.backend == "pallas"
+               and plan.boundary_mode != "periodic")
+    if hbm:
+        findings += lint_hbm(plan)
+    return Report(summarize_plan(plan), LINT_CHECKS, tuple(findings))

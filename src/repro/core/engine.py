@@ -122,6 +122,20 @@ class CasperEngine:
         comes from the plan cache)."""
         return self._run_jit(grid, iters=iters)
 
+    def analyze(self, shape: Sequence[int], dtype=None, *,
+                sweeps: int | None = None, lint: bool = True):
+        """Static analysis report for the plan this engine would use on
+        ``shape``: the layer-1 invariant catalog (already run — and
+        cached — when the plan was lowered) plus, when ``lint``, the
+        layer-2 jaxpr/HLO lint (de-specialization, dtype contract, FMA
+        contraction, HBM round-trips).  See :mod:`repro.analysis` and
+        docs/analysis.md."""
+        from repro import analysis  # lazy: keep engine import-light
+        if dtype is None:
+            dtype = jax.numpy.float32
+        plan = self.plan_for(shape, dtype, sweeps=sweeps)
+        return analysis.analyze_plan(plan, lint=lint)
+
     _INHERIT = object()   # tile sentinel: None is itself a legal tile value
 
     def distributed_fn(self, mesh, grid_axes: Sequence[str | None],

@@ -214,8 +214,52 @@ TPU_GRID_STEP_S = 2e-7               # per-grid-step sequencing overhead;
 VPU_SUBLANES, VPU_LANES = 8, 128     # f32 min tile (sublane x lane)
 
 
+#: Whole-grid VMEM budget for the periodic pad-free kernel's wrap
+#: gather (its input block is the *entire* grid, so the far edge is
+#: addressable).  Canonical home of the knob; ``kernels.engine``
+#: re-exports it as its patchable ``_PERIODIC_WHOLE_GRID_BYTES``.
+PERIODIC_WHOLE_GRID_BYTES = TPU_VMEM_BYTES // 4
+
+
 def _ceil_to(x: int, grain: int) -> int:
     return -(-x // grain) * grain
+
+
+def tile_window(tile: tuple[int, ...], halo: tuple[int, ...],
+                sweeps: int = 1) -> tuple[int, ...]:
+    """Fetched input-window extents of one fused block: ``tile +
+    2*sweeps*h`` per dim — the one statement of the temporal-blocking
+    window arithmetic shared by the cost model, the kernels and the
+    plan verifier (``analysis.verify``)."""
+    return tuple(t + 2 * sweeps * h for t, h in zip(tile, halo))
+
+
+def vmem_residency(tile: tuple[int, ...], halo: tuple[int, ...],
+                   sweeps: int = 1, itemsize: int = 4, n_terms: int = 1,
+                   *, boundary_mode: str = "zero",
+                   shape: tuple[int, ...] | None = None,
+                   periodic_budget_bytes: int | None = None) -> int:
+    """Bytes resident in VMEM during one grid step of the fused kernel:
+    the fetched window, a same-size accumulator, one live window-sized
+    intermediate per extra factored term, and the output block.
+
+    A periodic pad-free kernel additionally keeps the *whole grid* as
+    its input block (the wrap gather must address the far edge), so when
+    ``boundary_mode == "periodic"`` and the grid fits the pad-free
+    budget the grid block is charged too — previously the cost model
+    silently omitted it (found by the plan verifier's first full-matrix
+    run; see tests/test_analysis.py)."""
+    acc_itemsize = max(itemsize, 4)
+    window = math.prod(tile_window(tile, halo, sweeps))
+    vmem = ((1 + n_terms) * window * acc_itemsize
+            + math.prod(tile) * itemsize)
+    if boundary_mode == "periodic" and shape is not None:
+        budget = (PERIODIC_WHOLE_GRID_BYTES if periodic_budget_bytes is None
+                  else periodic_budget_bytes)
+        grid_bytes = math.prod(shape) * itemsize
+        if grid_bytes <= budget:        # pad-free: whole grid is resident
+            vmem += grid_bytes
+    return vmem
 
 
 def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
@@ -253,15 +297,15 @@ def pallas_tile_cost(spec: StencilSpec, shape: tuple[int, ...],
     """
     halo = spec.halo
     n_tiles = math.prod(-(-n // t) for n, t in zip(shape, tile))
-    acc_itemsize = max(itemsize, 4)
     terms = spec.factorization.compute_terms
     n_terms = 1 if terms is None else len(terms)
 
-    window = math.prod(t + 2 * sweeps * h for t, h in zip(tile, halo))
+    window = math.prod(tile_window(tile, halo, sweeps))
     # Resident set: fetched window + same-size accumulator + output block,
-    # plus one live window-sized intermediate per extra factored term.
-    vmem = ((1 + n_terms) * window * acc_itemsize
-            + math.prod(tile) * itemsize)
+    # plus one live window-sized intermediate per extra factored term —
+    # and the whole grid when a periodic pad-free wrap gather holds it.
+    vmem = vmem_residency(tile, halo, sweeps, itemsize, n_terms,
+                          boundary_mode=spec.boundary_mode, shape=shape)
     if vmem > TPU_VMEM_BYTES:
         return float("inf")
 
@@ -307,14 +351,13 @@ def pallas_pipeline_tile_cost(pipeline, shape: tuple[int, ...],
     stages = pipeline.stages
     big_halo = pipeline.halo
     n_tiles = math.prod(-(-n // t) for n, t in zip(shape, tile))
-    acc_itemsize = max(itemsize, 4)
     max_terms = max(
         (1 if s.factorization.compute_terms is None
          else len(s.factorization.compute_terms)) for s in stages)
 
-    window = math.prod(t + 2 * sweeps * h for t, h in zip(tile, big_halo))
-    vmem = ((1 + max_terms) * window * acc_itemsize
-            + math.prod(tile) * itemsize)
+    window = math.prod(tile_window(tile, big_halo, sweeps))
+    vmem = vmem_residency(tile, big_halo, sweeps, itemsize, max_terms,
+                          boundary_mode=pipeline.boundary_mode, shape=shape)
     if vmem > TPU_VMEM_BYTES:
         return float("inf")
 

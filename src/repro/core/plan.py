@@ -54,7 +54,7 @@ from typing import Literal, Sequence
 import jax
 import jax.numpy as jnp
 
-from .isa import Program, assemble, assemble_pipeline
+from .isa import assemble, assemble_pipeline
 from .stencil import (Factorization, StencilPipeline, StencilSpec, as_stages,
                       factor_taps)
 
@@ -322,13 +322,20 @@ class PlanCache:
         the counter updates and any autotune the factory runs) holds the
         cache lock, so two threads racing on the same novel key cannot
         double-lower or lose counter increments (the RLock keeps nested
-        lowering from the factory safe)."""
+        lowering from the factory safe).
+
+        Every freshly lowered plan is statically verified before it
+        enters the cache (``repro.analysis``, layer 1): strict mode
+        raises — and the offending plan is never cached — while the
+        default mode warns.  A cache hit re-runs zero analyses (the
+        verifier caches its report per plan)."""
         with self._lock:
             hit = self.get(key)
             if hit is not None:
                 return hit
             self.lowers += 1
             plan = factory()
+            _verify_new_plan(plan)
             self.put(key, plan)
             return plan
 
@@ -356,6 +363,15 @@ class PlanCache:
             self._store.clear()
             self.hits = self.misses = self.lowers = 0
             self.autotune_calls = self.evictions = 0
+
+
+def _verify_new_plan(plan) -> None:
+    """Layer-1 static verification of a freshly lowered plan (see
+    :mod:`repro.analysis`).  Lazy import: ``analysis`` imports this
+    module for its constants and decision functions, and lowering must
+    stay importable without the analysis package being touched."""
+    from repro import analysis  # lazy: avoids the import cycle
+    analysis.verify_and_record(plan)
 
 
 #: The process-wide plan cache: one per process, shared by every engine,

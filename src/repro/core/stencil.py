@@ -327,6 +327,15 @@ class StencilSpec:
         return factor_taps(self)
 
     @property
+    def classified_structure(self) -> str:
+        """The tap-structure class the classifier derives from the taps
+        alone (star / separable / dense), ignoring any ``structure``
+        forcing — what ``factorization.structure`` would be without
+        ``with_structure("dense")``.  The plan verifier compares the two
+        to report specialization deliberately left on the table."""
+        return _classify(self.ndim, self.taps).structure
+
+    @property
     def halo(self) -> tuple[int, ...]:
         """Per-dimension halo radius (max |offset| along that dim)."""
         return tuple(

@@ -79,7 +79,7 @@ from repro.core import plan as _plan
 from repro.core import ref as _ref
 from repro.core import perfmodel as _pm
 from repro.core.plan import resolve_interpret  # canonical auto-detect
-from repro.core.stencil import StencilPipeline, StencilSpec, factor_taps
+from repro.core.stencil import StencilPipeline, StencilSpec
 
 # Tile defaulting/validation is a lowering decision and lives in
 # repro.core.plan; re-exported here for the existing call sites.
@@ -95,7 +95,9 @@ _normalize_tile = _plan.normalize_tile
 # window model).  The *decision* consuming this budget is
 # ``repro.core.plan.ghost_strategy_for``; this module attribute remains
 # the configurable knob (read at call time, so tests can patch it).
-_PERIODIC_WHOLE_GRID_BYTES = _pm.TPU_VMEM_BYTES // 4
+# The canonical default lives in perfmodel so the cost model's
+# VMEM-residency accounting and the verifier share one number.
+_PERIODIC_WHOLE_GRID_BYTES = _pm.PERIODIC_WHOLE_GRID_BYTES
 
 
 def element_blockspec(block_shape, index_map) -> pl.BlockSpec:

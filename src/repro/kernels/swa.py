@@ -73,8 +73,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, window, tq, softcap, scale):
     s = jnp.where(valid[None], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    o = jnp.einsum("gqk,kd->gqd", p, v) / l
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("gqk,kd->gqd", p, v) / denom
     o_ref[0, 0] = o.astype(o_ref.dtype)
 
 

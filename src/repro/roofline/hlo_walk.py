@@ -375,3 +375,13 @@ class HloModule:
 
 def walk(hlo_text: str, n_devices: int) -> Totals:
     return HloModule(hlo_text, n_devices).totals()
+
+
+def walk_jit(fn, *args, n_devices: int = 1) -> Totals:
+    """Compile ``jit(fn)(*args)`` and walk the optimized HLO: the bridge
+    the stencil path uses (``analysis.jaxpr_lint`` counts a fused
+    pipeline's HBM round-trips against its staged fallback with it).
+    ``args`` may be concrete arrays or ``jax.ShapeDtypeStruct`` s."""
+    import jax  # lazy: keep the text walker importable without jax
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    return walk(text, n_devices)

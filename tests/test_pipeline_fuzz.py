@@ -90,6 +90,15 @@ def random_pipeline(seed: int, ndim: int, periodic: bool,
     return StencilPipeline(f"fuzz_pipe_{seed}", stages)
 
 
+def _assert_verified(plan) -> None:
+    """Every fuzzed plan rides through the static verifier for free:
+    ``lower()`` already verified it on the cache miss (warn mode), so
+    just assert the recorded report is error-free."""
+    from repro import analysis
+    report = analysis.report_for(plan) or analysis.verify_plan(plan)
+    assert report.ok, report.pretty()
+
+
 def check_executors(pipe: StencilPipeline, sweeps: int,
                     f32: bool = False) -> None:
     """The differential assertion: all four executors vs the eager
@@ -111,6 +120,7 @@ def check_executors(pipe: StencilPipeline, sweeps: int,
             for backend in ("ref", "pallas"):
                 plan = _plan.lower(pipe, shape, jnp.float32,
                                    backend=backend, sweeps=sweeps)
+                _assert_verified(plan)
                 got = np.asarray(_plan.run_plan(plan, g32, iters))
                 np.testing.assert_allclose(got, want, atol=1e-4,
                                            err_msg=f"f32 {backend}")
@@ -119,6 +129,7 @@ def check_executors(pipe: StencilPipeline, sweeps: int,
         for backend in ("ref", "pallas"):
             plan = _plan.lower(pipe, shape, g.dtype, backend=backend,
                                sweeps=sweeps)
+            _assert_verified(plan)
             got = g
             for _ in range(iters // sweeps):        # eager fused blocks
                 got = _plan.execute(plan, got)
@@ -138,6 +149,7 @@ def check_executors(pipe: StencilPipeline, sweeps: int,
                                       err_msg="distributed")
 
         plan = _plan.lower(pipe, shape, g.dtype, backend="vm")
+        _assert_verified(plan)
         got, _ = _vm.execute_plan(plan, np.asarray(g), iters=iters)
         np.testing.assert_allclose(got, want, atol=1e-12, err_msg="vm")
 
@@ -230,6 +242,7 @@ def test_fuzz_unfusable_staged_fallback(seed, n_stages):
         want = np.asarray(want)
         for backend in ("ref", "pallas"):
             plan = _plan.lower(pipe, g.shape, g.dtype, backend=backend)
+            _assert_verified(plan)
             assert not plan.fused
             got = g
             for _ in range(2):

@@ -197,19 +197,12 @@ def test_periodic_large_grid_falls_back_to_padded(monkeypatch, rng):
 
 
 # ---------------------------------------------------------------------------
-# jaxpr guard: the specialized paths must stay specialized
+# jaxpr guard: the specialized paths must stay specialized.  The one-off
+# counter that used to live here is now the real de-specialization pass
+# in repro.analysis (jaxpr_lint); this test pins the tightest per-call
+# bounds on the oracle, the pass bounds every lowered plan's executor.
 # ---------------------------------------------------------------------------
-def _count_primitive(jaxpr, name: str) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
-        for v in eqn.params.values():
-            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
-                inner = getattr(sub, "jaxpr", None)
-                if inner is not None:
-                    n += _count_primitive(inner, name)
-    return n
+from repro.analysis import count_primitive as _count_primitive  # noqa: E402
 
 
 @pytest.mark.parametrize("name", MATRIX_SPECS)
