@@ -24,13 +24,15 @@ from benchmarks.pipelines import (bench6_schema_errors,  # noqa: E402
                                   pipelines_bench)
 from benchmarks.serving import (bench5_schema_errors,  # noqa: E402
                                 serving_bench)
+from benchmarks.slabs import (bench7_schema_errors,  # noqa: E402
+                              slabs_bench)
 from benchmarks.stencil_cluster import stencil_cluster_mapping  # noqa: E402
 
 BENCHES = (
     fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu, fig13_pims,
     fig14_mapping, table4_instructions, temporal_blocking,
     structure_bench, stencil_wallclock, serving_bench, pipelines_bench,
-    lm_roofline, stencil_cluster_mapping,
+    slabs_bench, lm_roofline, stencil_cluster_mapping,
 )
 
 
@@ -71,6 +73,14 @@ def write_bench6(detail: dict, root: str = _ROOT) -> str:
                         "BENCH_6.json", root)
 
 
+def write_bench7(detail: dict, root: str = _ROOT) -> str:
+    """Write the slab-streaming bench's BENCH_7.json at the repo root
+    (slabbed-vs-whole-grid wallclock + modeled host<->device traffic,
+    forced-budget bit-identity); schema-checked before writing."""
+    return _write_bench(detail, "bench7", bench7_schema_errors,
+                        "BENCH_7.json", root)
+
+
 def main() -> None:
     out_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "results")
@@ -89,6 +99,8 @@ def main() -> None:
     print(f"# wrote {write_bench5(all_detail['serving_bench'])}",
           file=sys.stderr)
     print(f"# wrote {write_bench6(all_detail['pipelines_bench'])}",
+          file=sys.stderr)
+    print(f"# wrote {write_bench7(all_detail['slabs_bench'])}",
           file=sys.stderr)
     summaries = {k: v.get("summary") for k, v in all_detail.items()
                  if isinstance(v, dict) and v.get("summary")}

@@ -238,6 +238,46 @@ def pipeline_smoke() -> dict:
                 for w in payload["workloads"]}}
 
 
+def slab_smoke() -> dict:
+    """Out-of-core slab streaming end to end: run the BENCH_7 bench
+    (which forces ``CASPER_SLAB_BUDGET`` to a quarter of each grid),
+    schema-check its payload, write the BENCH_7.json artifact, and
+    assert
+
+    * every workload actually streamed (>= 2 slabs with a positive
+      ``sweeps*halo`` overlap),
+    * the slabbed result is **bit-identical** (f64) to the whole-grid
+      plan on every workload — the ISSUE 8 acceptance criterion, and
+    * the modeled host<->device traffic shows the expected shape:
+      streamed upload bytes strictly above the whole-grid upload (the
+      redundant overlap windows), overhead ratio > 1.
+    """
+    from benchmarks.run import write_bench7
+    from benchmarks.slabs import bench7_schema_errors, slabs_bench
+    rows, detail = slabs_bench()
+    payload = detail["bench7"]
+    errs = bench7_schema_errors(payload)
+    assert not errs, errs
+    path = write_bench7(detail)
+    for w in payload["workloads"]:
+        assert w["n_slabs"] >= 2, w
+        assert w["slab_overlap"] >= 1, w
+        assert w["bit_identical"], (w["spec"], "slabbed != whole-grid")
+        traffic = w["traffic"]
+        assert traffic["slab_h2d_bytes"] > traffic["whole_h2d_bytes"], w
+        assert traffic["overhead"] > 1.0, w
+    assert detail["summary"]["all_bit_identical"]
+    return {"bench7_path": path,
+            "n_slabs": {w["spec"]: w["n_slabs"]
+                        for w in payload["workloads"]},
+            "traffic_overheads": {
+                w["spec"]: round(w["traffic"]["overhead"], 3)
+                for w in payload["workloads"]},
+            "wallclock_ratios": {
+                w["spec"]: round(w["wallclock"]["ratio"], 2)
+                for w in payload["workloads"]}}
+
+
 def serve_smoke() -> dict:
     """Serve determinism: same key -> same tokens, and exactly
     ``n_tokens - 1`` jitted decode steps per generate call."""
@@ -313,9 +353,12 @@ def main() -> None:
     pipe = pipeline_smoke()
     for n, r in pipe["hbm_reductions"].items():
         print(f"pipeline_smoke_{n}_hbm_reduction,0.000,{r}")
+    slab = slab_smoke()
+    for n, r in slab["traffic_overheads"].items():
+        print(f"slab_smoke_{n}_traffic_overhead,0.000,{r}")
     print(f"# smoke OK: {n_rows} rows, engine parity err {err:.2e}, "
           f"structure {struct}, distributed {dist}, serve {srv}, "
-          f"stencil serving {ssrv}, pipelines {pipe}",
+          f"stencil serving {ssrv}, pipelines {pipe}, slabs {slab}",
           file=sys.stderr)
 
 

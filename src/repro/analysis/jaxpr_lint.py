@@ -250,6 +250,15 @@ def lint_plan(plan, hbm: bool | None = None) -> Report:
             "inspect collectives)"))
         return Report(summarize_plan(plan), ("jaxpr-lint",),
                       tuple(findings))
+    if plan.needs_host_streaming:
+        findings.append(Finding(
+            "jaxpr-lint", "info",
+            "slab-streamed plan executes through eager host staging "
+            "(jax.device_put per slab cannot be traced); jaxpr lint "
+            "skipped — the slab cover/overlap/residency invariants are "
+            "verified by the layer-1 slabs check"))
+        return Report(summarize_plan(plan), ("jaxpr-lint",),
+                      tuple(findings))
 
     jaxpr = trace_plan_jaxpr(plan)
     findings += lint_despecialization(plan, jaxpr)

@@ -319,14 +319,23 @@ def _check_ghost(plan) -> list[Finding]:
     """Re-run the ghost-strategy decision from the plan's primary
     inputs and compare: ``ref`` pads, ``vm`` streams, a non-fusable
     pipeline stages, distributed Pallas always takes the padded window,
-    and single-device Pallas re-derives pad-free vs padded-window
-    (periodic additionally bounded by the whole-grid VMEM budget)."""
+    a single-device ref/pallas grid past the recorded slab budget
+    streams from host, and single-device Pallas otherwise re-derives
+    pad-free vs padded-window (periodic additionally bounded by the
+    whole-grid VMEM budget)."""
     g = plan.ghost_strategy
     if g not in _plan.GHOST_STRATEGIES:
         return [Finding("ghost-strategy", "error",
                         f"unknown ghost strategy {g!r}")]
+    itemsize = np.dtype(plan.dtype).itemsize
+    over_budget = (plan.slab_budget is not None
+                   and int(np.prod(plan.shape)) * itemsize
+                   > plan.slab_budget)
     if plan.is_pipeline and not plan.fused:
         expected = "staged"
+    elif (over_budget and not plan.is_distributed
+          and plan.backend in ("ref", "pallas")):
+        expected = "stream-from-host"
     elif plan.backend == "ref":
         expected = "pad"
     elif plan.backend == "vm":
@@ -344,6 +353,62 @@ def _check_ghost(plan) -> list[Finding]:
             f"(backend={plan.backend}, boundary={plan.boundary_mode}, "
             f"fused={plan.fused}, distributed={plan.is_distributed})")]
     return []
+
+
+@_check("slabs")
+def _check_slabs(plan) -> list[Finding]:
+    """Slab-streaming invariants (ISSUE 8): a ``stream-from-host`` plan
+    must carry an *exact* contiguous slab cover of the outermost axis,
+    an overlap exactly ``sweeps * halo`` deep (the slab boundary is a
+    halo against host memory), and per-slab streaming resident bytes
+    within the recorded budget (a single-row slab is irreducible and
+    exempt); every other plan must carry no slab fields."""
+    if not plan.streams_from_host:
+        return [Finding("slabs", "error",
+                        f"non-streamed plan carries {field}={val!r}")
+                for field, val in (("slabs", plan.slabs),
+                                   ("slab_overlap", plan.slab_overlap))
+                if val is not None]
+    if plan.slab_budget is None:
+        return [Finding("slabs", "error",
+                        "streamed plan records no slab_budget")]
+    if not plan.slabs:
+        return [Finding("slabs", "error",
+                        f"streamed plan has no slab cover: {plan.slabs!r}")]
+    out = []
+    prev_stop = 0
+    for start, stop in plan.slabs:
+        if start != prev_stop:
+            out.append(Finding(
+                "slabs", "error",
+                f"slab cover {'gap' if start > prev_stop else 'overlap'} "
+                f"at {start} (previous slab stops at {prev_stop})"))
+        if stop <= start:
+            out.append(Finding("slabs", "error",
+                               f"empty slab ({start}, {stop})"))
+        prev_stop = stop
+    if prev_stop != plan.shape[0]:
+        out.append(Finding(
+            "slabs", "error",
+            f"slab cover stops at {prev_stop}, grid outermost extent is "
+            f"{plan.shape[0]}"))
+    deep0 = plan.deep_halo[0]
+    if plan.slab_overlap != deep0:
+        out.append(Finding(
+            "slabs", "error",
+            f"slab overlap {plan.slab_overlap} != sweeps*halo depth "
+            f"{deep0} (sweeps={plan.sweeps}, halo={plan.halo})"))
+    itemsize = np.dtype(plan.dtype).itemsize
+    for start, stop in plan.slabs:
+        length = stop - start
+        resident = _pm.slab_resident_bytes(length, plan.shape,
+                                           plan.deep_halo, itemsize)
+        if resident > plan.slab_budget and length > 1:
+            out.append(Finding(
+                "slabs", "error",
+                f"slab ({start}, {stop}) streaming resident set "
+                f"{resident} B exceeds budget {plan.slab_budget} B"))
+    return out
 
 
 @_check("fusability")

@@ -119,7 +119,10 @@ class CasperEngine:
     def run(self, grid: jax.Array, iters: int = 1) -> jax.Array:
         """``iters`` total stencil applications (fused ``sweeps`` at a
         time; any remainder runs as one narrower fused call whose plan
-        comes from the plan cache)."""
+        comes from the plan cache).  A grid past the device-memory
+        budget (``CASPER_SLAB_BUDGET``) transparently runs out-of-core:
+        the shared runner routes it through the slab-streaming executor
+        (``kernels.stream``) and returns a host array."""
         return self._run_jit(grid, iters=iters)
 
     def analyze(self, shape: Sequence[int], dtype=None, *,

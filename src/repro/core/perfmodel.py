@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 
 from .isa import Program, assemble
 from .segment import SegmentConfig, remote_fraction
@@ -219,6 +220,71 @@ VPU_SUBLANES, VPU_LANES = 8, 128     # f32 min tile (sublane x lane)
 #: addressable).  Canonical home of the knob; ``kernels.engine``
 #: re-exports it as its patchable ``_PERIODIC_WHOLE_GRID_BYTES``.
 PERIODIC_WHOLE_GRID_BYTES = TPU_VMEM_BYTES // 4
+
+# ----------------------------------------------------------------------------
+# Out-of-core slab streaming budget (ghost strategy "stream-from-host")
+# ----------------------------------------------------------------------------
+#: Device-memory capacity a whole grid (plus streaming working set) may
+#: occupy before ``plan.lower()`` switches to out-of-core slab
+#: streaming.  v5e HBM per chip; "Beyond 16GB" (PAPERS.md) frames the
+#: same threshold on GPUs.
+TPU_HBM_BYTES = 16 * 1024 ** 3
+
+#: Environment override for the slab-streaming budget (bytes).  Tests,
+#: the lint matrix and BENCH_7 force tiny budgets through this knob to
+#: exercise streaming on grids that still fit, so the env value is part
+#: of the plan-cache key (``plan.plan_key``).
+SLAB_BUDGET_ENV = "CASPER_SLAB_BUDGET"
+
+
+def slab_budget_bytes() -> int:
+    """The configured device-memory budget for whole-grid residency:
+    :data:`TPU_HBM_BYTES` unless ``CASPER_SLAB_BUDGET`` overrides it."""
+    raw = os.environ.get(SLAB_BUDGET_ENV)
+    if raw is None:
+        return TPU_HBM_BYTES
+    budget = int(raw)
+    if budget < 1:
+        raise ValueError(f"{SLAB_BUDGET_ENV} must be >= 1 byte, got {raw!r}")
+    return budget
+
+
+def _slab_row_bytes(shape: tuple[int, ...], deep_halo: tuple[int, ...],
+                    itemsize: int) -> int:
+    """Bytes of one outermost-axis row of an uploaded slab window: dims
+    1.. ride along whole, ghost-padded ``deep_halo[d]`` on each side."""
+    row = itemsize
+    for d in range(1, len(shape)):
+        row *= shape[d] + 2 * deep_halo[d]
+    return row
+
+
+def slab_resident_bytes(slab_len: int, shape: tuple[int, ...],
+                        deep_halo: tuple[int, ...], itemsize: int) -> int:
+    """Device bytes resident while one slab computes under the
+    double-buffered streaming executor: the slab's fetched window
+    (``slab_len + 2*deep_halo[0]`` outermost rows, dims 1..
+    ghost-padded), the *next* slab's window uploading behind it, and the
+    current output block.  The one statement of the streaming working
+    set shared by the lowering decision, the plan verifier and
+    BENCH_7."""
+    row = _slab_row_bytes(shape, deep_halo, itemsize)
+    window_rows = slab_len + 2 * deep_halo[0]
+    out_bytes = slab_len * itemsize * math.prod(shape[1:])
+    return 2 * window_rows * row + out_bytes
+
+
+def max_slab_len(shape: tuple[int, ...], deep_halo: tuple[int, ...],
+                 itemsize: int, budget: int) -> int:
+    """Largest outermost slab length whose streaming resident set fits
+    ``budget`` (inverse of :func:`slab_resident_bytes`), clamped to 1 —
+    a single-row slab is irreducible, so a budget below even that still
+    streams row by row."""
+    row = _slab_row_bytes(shape, deep_halo, itemsize)
+    out_row = itemsize * math.prod(shape[1:])
+    # resident(L) = 2*(L + 2*D0)*row + L*out_row  <=  budget
+    length = (budget - 4 * deep_halo[0] * row) // (2 * row + out_row)
+    return max(1, min(int(length), int(shape[0])))
 
 
 def _ceil_to(x: int, grain: int) -> int:

@@ -47,13 +47,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import threading
 from collections import OrderedDict
 from typing import Literal, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from . import perfmodel as _pm
 from .isa import assemble, assemble_pipeline
 from .stencil import (Factorization, StencilPipeline, StencilSpec, as_stages,
                       factor_taps)
@@ -83,8 +86,15 @@ BACKENDS = ("ref", "pallas", "vm")
 #:                        at access time;
 #: * ``"staged"``       — non-fusable pipelines only: execute the chain
 #:                        stage by stage through per-stage cached plans
-#:                        (each stage re-resolves its own strategy).
-GHOST_STRATEGIES = ("pad", "pad-free", "padded-window", "stream", "staged")
+#:                        (each stage re-resolves its own strategy);
+#: * ``"stream-from-host"`` — out-of-core: the grid exceeds the device
+#:                        budget (``perfmodel.slab_budget_bytes``, env
+#:                        ``CASPER_SLAB_BUDGET``), so the plan carries a
+#:                        slab decomposition along the outermost axis
+#:                        and executes through the host-staging slab
+#:                        executor (:mod:`repro.kernels.stream`).
+GHOST_STRATEGIES = ("pad", "pad-free", "padded-window", "stream", "staged",
+                    "stream-from-host")
 
 #: Halo-exchange strategies for one sharded axis of a distributed plan:
 #: ``"zero-fill"`` (plain ``ppermute``; edge devices receive zeros),
@@ -227,6 +237,13 @@ class ExecutionPlan:
     mesh_fingerprint: tuple | None = None
     fused: bool = True                  # False: non-fusable pipeline —
                                         # execute stage plans in sequence
+    slabs: tuple[tuple[int, int], ...] | None = None
+                                        # stream-from-host: (start, stop)
+                                        # outermost-axis slab cover
+    slab_overlap: int | None = None     # stream-from-host: deep_halo[0]
+    slab_budget: int | None = None      # device budget (bytes) the slab
+                                        # decision was evaluated against
+                                        # (single-device ref/pallas only)
 
     @property
     def stream_plan(self):
@@ -236,6 +253,24 @@ class ExecutionPlan:
     @property
     def is_distributed(self) -> bool:
         return self.mesh is not None
+
+    @property
+    def streams_from_host(self) -> bool:
+        """True when this plan executes out-of-core by slab streaming."""
+        return self.ghost_strategy == "stream-from-host"
+
+    @property
+    def needs_host_streaming(self) -> bool:
+        """True when execution must stay on the eager host-staging path:
+        the plan itself streams, or it is a staged pipeline whose
+        per-stage plans will (``jax.device_put`` staging cannot be
+        traced, so runners route these around their jitted paths)."""
+        if self.streams_from_host:
+            return True
+        if self.is_pipeline and not self.fused and self.slab_budget is not None:
+            grid_bytes = math.prod(self.shape) * jnp.dtype(self.dtype).itemsize
+            return grid_bytes > self.slab_budget
+        return False
 
     @property
     def is_pipeline(self) -> bool:
@@ -410,11 +445,14 @@ def plan_key(spec: StencilSpec, shape, dtype, backend: str, sweeps: int,
              tile, interpret: bool, mesh=None, grid_axes=None) -> tuple:
     """The plan-cache key.  Includes everything lowering depends on —
     the full spec (boundary + structure participate via spec equality),
-    shape, dtype, backend, sweeps, the tile *request* and the mesh
-    fingerprint."""
+    shape, dtype, backend, sweeps, the tile *request*, the mesh
+    fingerprint and the slab-streaming budget (``CASPER_SLAB_BUDGET``
+    changes the stream-from-host decision, so forced-budget plans must
+    never collide with default-budget ones)."""
     return (spec, tuple(int(n) for n in shape), jnp.dtype(dtype).name,
             backend, int(sweeps), canonical_tile_request(tile),
-            bool(interpret), mesh_fingerprint(mesh, grid_axes))
+            bool(interpret), mesh_fingerprint(mesh, grid_axes),
+            _pm.slab_budget_bytes())
 
 
 # ---------------------------------------------------------------------------
@@ -453,7 +491,26 @@ def lower(spec: StencilSpec, shape: Sequence[int], dtype, *,
     return PLAN_CACHE.get_or_lower(
         key, lambda: _lower_uncached(spec, shape, jnp.dtype(dtype), backend,
                                      sweeps, tile_req, mesh, axes, interp,
-                                     key[-1]))
+                                     mesh_fingerprint(mesh, axes)))
+
+
+def _slab_decomposition(shape, deep, itemsize):
+    """The out-of-core decision for a single-device ref/pallas plan:
+    ``(budget, slabs, overlap)``.  ``slabs`` is ``None`` while the whole
+    grid fits the device budget; otherwise it is an exact contiguous
+    cover of the outermost axis in equal slabs (short last slab for
+    non-divisible extents), each sized so the double-buffered streaming
+    resident set (``perfmodel.slab_resident_bytes``) fits the budget,
+    and ``overlap = deep[0]`` — the slab boundary is a ``sweeps*halo``
+    deep halo against host memory, PR 2's arithmetic verbatim."""
+    budget = _pm.slab_budget_bytes()
+    if math.prod(shape) * itemsize <= budget:
+        return budget, None, None
+    overlap = deep[0]
+    length = _pm.max_slab_len(shape, deep, itemsize, budget)
+    slabs = tuple((s, min(s + length, shape[0]))
+                  for s in range(0, shape[0], length))
+    return budget, slabs, overlap
 
 
 def _shard_shape(shape, mesh, axes) -> tuple[int, ...]:
@@ -499,12 +556,24 @@ def _lower_pipeline_uncached(pipe, shape, dtype, backend, sweeps, tile_req,
                 exchange_strategy_for(mode) if axes[d] is not None else None
                 for d in range(pipe.ndim))
 
+    slab_budget = slabs = slab_overlap = None
+    if mesh is None and backend in ("ref", "pallas"):
+        if fused:
+            slab_budget, slabs, slab_overlap = _slab_decomposition(
+                shape, deep, dtype.itemsize)
+        else:
+            # staged chains stream per stage; record the budget so
+            # runners know to stay on the eager host-staging path
+            slab_budget = _pm.slab_budget_bytes()
+
     resolved_tile = None
     ghost = "pad" if fused else "staged"
     if not fused:
         pass                                # stage plans decide everything
     elif backend == "pallas":
         tune_shape = shard_shape if shard_shape is not None else shape
+        if slabs is not None:               # tune for the slab, not the grid
+            tune_shape = (slabs[0][1] - slabs[0][0],) + shape[1:]
         if tile_req == "auto":
             from repro.kernels import tune      # lazy: optional dep
             PLAN_CACHE.autotune_calls += 1
@@ -515,11 +584,15 @@ def _lower_pipeline_uncached(pipe, shape, dtype, backend, sweeps, tile_req,
             resolved_tile = normalize_tile(pipe, tile_req)
         if mesh is not None:
             ghost = "padded-window"
+        elif slabs is not None:
+            ghost = "stream-from-host"
         else:
             ghost = ghost_strategy_for(pipe, shape, dtype.itemsize, sweeps,
                                        resolved_tile)
     elif backend == "vm":
         ghost = "stream"
+    elif slabs is not None:                 # fused ref chain, over budget
+        ghost = "stream-from-host"
 
     return ExecutionPlan(
         spec=pipe, shape=shape, dtype=dtype.name, backend=backend,
@@ -528,7 +601,8 @@ def _lower_pipeline_uncached(pipe, shape, dtype, backend, sweeps, tile_req,
         deep_halo=deep, factorization=None, boundary_mode=mode,
         boundary_value=value, program=assemble_pipeline(pipe), mesh=mesh,
         grid_axes=axes, exchange=exchange, shard_shape=shard_shape,
-        mesh_fingerprint=fingerprint, fused=fused)
+        mesh_fingerprint=fingerprint, fused=fused, slabs=slabs,
+        slab_overlap=slab_overlap, slab_budget=slab_budget)
 
 
 def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
@@ -550,10 +624,17 @@ def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
             exchange_strategy_for(mode) if axes[d] is not None else None
             for d in range(spec.ndim))
 
+    slab_budget = slabs = slab_overlap = None
+    if mesh is None and backend in ("ref", "pallas"):
+        slab_budget, slabs, slab_overlap = _slab_decomposition(
+            shape, deep, dtype.itemsize)
+
     resolved_tile = None
     ghost = "pad"                               # oracle default
     if backend == "pallas":
         tune_shape = shard_shape if shard_shape is not None else shape
+        if slabs is not None:                   # tune for the slab window
+            tune_shape = (slabs[0][1] - slabs[0][0],) + shape[1:]
         if tile_req == "auto":
             from repro.kernels import tune      # lazy: optional dep
             PLAN_CACHE.autotune_calls += 1
@@ -565,11 +646,15 @@ def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
             # the shard-local kernel always runs on the exchanged
             # (already ghost-extended) window
             ghost = "padded-window"
+        elif slabs is not None:
+            ghost = "stream-from-host"
         else:
             ghost = ghost_strategy_for(spec, shape, dtype.itemsize, sweeps,
                                        resolved_tile)
     elif backend == "vm":
         ghost = "stream"
+    elif slabs is not None:                     # ref oracle, over budget
+        ghost = "stream-from-host"
 
     return ExecutionPlan(
         spec=spec, shape=shape, dtype=dtype.name, backend=backend,
@@ -578,7 +663,8 @@ def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
         deep_halo=deep, factorization=factor_taps(spec),
         boundary_mode=mode, boundary_value=value, program=assemble(spec),
         mesh=mesh, grid_axes=axes, exchange=exchange,
-        shard_shape=shard_shape, mesh_fingerprint=fingerprint)
+        shard_shape=shard_shape, mesh_fingerprint=fingerprint,
+        slabs=slabs, slab_overlap=slab_overlap, slab_budget=slab_budget)
 
 
 # ---------------------------------------------------------------------------
@@ -587,9 +673,13 @@ def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
 def execute(plan: ExecutionPlan, grid):
     """One fused block — ``plan.sweeps`` stencil applications — on the
     plan's backend.  Traceable under jit/vmap (except ``"vm"``, which is
-    numpy).  A non-fusable pipeline plan (``fused=False``) executes its
-    stage chain through per-stage cached plans instead — same chained
-    semantics, per-stage HBM traffic."""
+    numpy, and ``"stream-from-host"``, which stages slabs through
+    ``jax.device_put``).  A non-fusable pipeline plan (``fused=False``)
+    executes its stage chain through per-stage cached plans instead —
+    same chained semantics, per-stage HBM traffic."""
+    if plan.streams_from_host:
+        from repro.kernels import stream as _stream     # lazy: optional dep
+        return _stream.execute_plan(plan, grid)
     if plan.is_pipeline and not plan.fused:
         out = grid
         for _ in range(plan.sweeps):
@@ -616,8 +706,22 @@ def run_plan(plan: ExecutionPlan, grid, iters: int):
     rolled into one ``lax.scan`` plus one narrower remainder block whose
     plan comes from the cache — the one statement of the fused iteration
     loop shared by the engine, the distributed path and the serving
-    front-end."""
+    front-end.
+
+    ``iters == 0`` returns a *defensive copy* of the input, never the
+    input itself: the slab executor donates device buffers, so a no-op
+    result aliasing a caller-held array would be corrupted by the next
+    streamed call (regression-tested in tests/test_slabs.py).  Plans on
+    the host-staging path (``needs_host_streaming``) run an eager slab
+    loop instead of ``lax.scan`` — device staging cannot be traced."""
     q, r = plan.decompose(iters)
+    if iters == 0:
+        if isinstance(grid, np.ndarray):
+            return grid.copy()
+        return jnp.array(grid, copy=True)
+    if plan.needs_host_streaming:
+        from repro.kernels import stream as _stream     # lazy: optional dep
+        return _stream.run_plan_streamed(plan, grid, iters)
     out = grid
     if q:
         def body(g, _):
@@ -636,6 +740,16 @@ def _grid_shape_for(spec: StencilSpec, grid) -> tuple[int, ...]:
     return tuple(grid.shape)
 
 
+def _may_stream(spec, shape, dtype, backend: str) -> bool:
+    """Cheap eager predicate: could lowering pick ``stream-from-host``
+    for these inputs?  Lets the runners keep the common (fitting) path
+    free of eager plan-cache traffic — they only lower outside the jit
+    when the grid actually exceeds the configured budget."""
+    return (backend in ("ref", "pallas")
+            and math.prod(shape) * jnp.dtype(dtype).itemsize
+            > _pm.slab_budget_bytes())
+
+
 @functools.lru_cache(maxsize=512)
 def runner(spec: StencilSpec, backend: str, sweeps: int, tile_req,
            interpret: bool):
@@ -644,13 +758,27 @@ def runner(spec: StencilSpec, backend: str, sweeps: int, tile_req,
     :class:`~repro.core.engine.CasperEngine` with identical options
     reuses the *same* jitted callable — zero retraces, zero re-lowers,
     zero autotune sweeps (the plan-cache counters pin this).
+
+    Grids past the slab-streaming budget route around the jitted path to
+    the eager host-staging executor (``jax.device_put`` staging cannot
+    be traced); fitting grids take the jitted path unchanged.
     """
     @functools.partial(jax.jit, static_argnames=("iters",))
-    def run(grid, iters: int):
+    def run_jit(grid, iters: int):
         plan = lower(spec, _grid_shape_for(spec, grid), grid.dtype,
                      backend=backend, sweeps=sweeps, tile=tile_req,
                      interpret=interpret)
         return run_plan(plan, grid, iters)
+
+    def run(grid, iters: int):
+        if _may_stream(spec, _grid_shape_for(spec, grid), grid.dtype,
+                       backend):
+            plan = lower(spec, _grid_shape_for(spec, grid), grid.dtype,
+                         backend=backend, sweeps=sweeps, tile=tile_req,
+                         interpret=interpret)
+            if plan.needs_host_streaming:
+                return run_plan(plan, grid, iters)
+        return run_jit(grid, iters=iters)
     return run
 
 
@@ -660,12 +788,23 @@ def batch_runner(spec: StencilSpec, backend: str, sweeps: int, tile_req,
     """Process-wide jitted ``run(grids, iters)`` over a stacked batch of
     same-shaped grids: one plan lowered for the element shape, one
     vmapped fused call for the whole bucket (the serving front-end's
-    execution primitive)."""
+    execution primitive).  Slab-streamed element shapes fall back to an
+    eager per-grid host-staging loop — the serving front-end reports
+    those requests under a distinct stat instead of the bucket path."""
     @functools.partial(jax.jit, static_argnames=("iters",))
-    def run(grids, iters: int):
+    def run_jit(grids, iters: int):
         plan = lower(spec, grids.shape[1:], grids.dtype, backend=backend,
                      sweeps=sweeps, tile=tile_req, interpret=interpret)
         return jax.vmap(lambda g: run_plan(plan, g, iters))(grids)
+
+    def run(grids, iters: int):
+        if _may_stream(spec, tuple(grids.shape[1:]), grids.dtype, backend):
+            plan = lower(spec, grids.shape[1:], grids.dtype, backend=backend,
+                         sweeps=sweeps, tile=tile_req, interpret=interpret)
+            if plan.needs_host_streaming:
+                return np.stack([np.asarray(run_plan(plan, g, iters))
+                                 for g in np.asarray(grids)])
+        return run_jit(grids, iters=iters)
     return run
 
 

@@ -73,6 +73,10 @@ class ServeStats:
     batched: bool
     plan_cache: dict            # delta: hits/misses/lowers/autotune_calls
     buckets: list               # per-bucket: spec, shape, size, seconds
+    n_slab_streamed: int = 0    # requests served out-of-core (the grid
+                                # exceeded CASPER_SLAB_BUDGET): these
+                                # bypass the vmapped bucket path and run
+                                # per request through kernels.stream
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -149,11 +153,36 @@ class StencilServer:
         results: list = [None] * len(requests)
         bucket_stats = []
         points = 0
+        n_slab_streamed = 0
         t0 = time.perf_counter()
         for key, idxs in self._buckets(requests).items():
             spec = self.specs[requests[idxs[0]].spec_name]
             iters = requests[idxs[0]].iters
             grids = [requests[i].grid for i in idxs]
+            shape = tuple(grids[0].shape)
+            plan = _plan.lower(spec, shape, grids[0].dtype,
+                               backend=self.backend, sweeps=self.sweeps,
+                               tile=self.tile_request,
+                               interpret=self.interpret)
+            if plan.needs_host_streaming:
+                # out-of-core bucket: grids this large cannot stack on
+                # the device, so each request walks the slab executor
+                # host-side (the plan is still shared and cached)
+                tb = time.perf_counter()
+                for i in idxs:
+                    results[i] = np.asarray(
+                        _plan.run_plan(plan, np.asarray(requests[i].grid),
+                                       iters))
+                    points += int(results[i].size)
+                n_slab_streamed += len(idxs)
+                bucket_stats.append({
+                    "spec": spec.name, "shape": shape,
+                    "dtype": np.dtype(grids[0].dtype).name,
+                    "iters": iters, "size": len(idxs),
+                    "seconds": time.perf_counter() - tb,
+                    "slab_streamed": True,
+                })
+                continue
             if all(isinstance(g, np.ndarray) for g in grids):
                 # requests usually arrive as host buffers: stack on host,
                 # pay ONE device transfer per bucket (stacking 48 small
@@ -170,6 +199,7 @@ class StencilServer:
                 "dtype": np.dtype(stacked.dtype).name,
                 "iters": iters, "size": len(idxs),
                 "seconds": time.perf_counter() - tb,
+                "slab_streamed": False,
             })
             points += int(stacked.size)
             for j, i in enumerate(idxs):
@@ -187,7 +217,7 @@ class StencilServer:
             points_per_s=points / seconds if seconds else 0.0,
             batched=True,
             plan_cache=_cache_delta(before, _plan.plan_cache_stats()),
-            buckets=bucket_stats)
+            buckets=bucket_stats, n_slab_streamed=n_slab_streamed)
         return results, stats
 
     def serve_sequential(self, requests: Sequence[StencilRequest]

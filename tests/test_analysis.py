@@ -356,3 +356,87 @@ def test_verifier_vmem_check_uses_residency_math():
     mut = dataclasses.replace(p, tile=(1024, 1024))
     assert "vmem-budget" in {f.check for f in
                              analysis.verify_plan(mut).errors}
+
+
+# ---------------------------------------------------------------------------
+# Slab-streaming invariants (the "slabs" check) — mutation coverage
+# ---------------------------------------------------------------------------
+def _streamed_plan(backend="ref"):
+    """A clean "stream-from-host" plan: jacobi2d forced past a quarter-
+    grid budget (the slab axes are unaffected by backend)."""
+    import os
+    shape = SHAPES[2]
+    budget = 64 * 128 * 8 // 4
+    old = os.environ.get(pm.SLAB_BUDGET_ENV)
+    os.environ[pm.SLAB_BUDGET_ENV] = str(budget)
+    try:
+        p = lower(PAPER_STENCILS["jacobi2d"], backend=backend)
+    finally:
+        if old is None:
+            os.environ.pop(pm.SLAB_BUDGET_ENV, None)
+        else:
+            os.environ[pm.SLAB_BUDGET_ENV] = old
+    assert p.streams_from_host
+    return p
+
+
+def test_clean_streamed_plans_zero_findings():
+    for backend in ("ref", "pallas"):
+        p = _streamed_plan(backend)
+        rep = analysis.report_for(p) or analysis.verify_plan(p)
+        assert not rep.errors, rep.pretty()
+        assert not rep.warnings, rep.pretty()
+
+
+def test_mutation_gapped_slab_cover():
+    clean = _streamed_plan()
+    slabs = list(clean.slabs)
+    s0, s1 = slabs[1]
+    slabs[1] = (s0 + 1, s1)                  # row s0 covered by no slab
+    assert "slabs" in _errors_of(
+        dataclasses.replace(clean, slabs=tuple(slabs)))
+
+
+def test_mutation_overlapping_slab_cover():
+    clean = _streamed_plan()
+    slabs = list(clean.slabs)
+    s0, s1 = slabs[1]
+    slabs[1] = (s0 - 1, s1)                  # row s0-1 covered twice
+    assert "slabs" in _errors_of(
+        dataclasses.replace(clean, slabs=tuple(slabs)))
+    # cover must also start at 0 and end at shape[0]
+    assert "slabs" in _errors_of(
+        dataclasses.replace(clean, slabs=clean.slabs[:-1]))
+
+
+def test_mutation_shallow_slab_overlap():
+    clean = _streamed_plan()
+    assert clean.slab_overlap == clean.deep_halo[0]
+    assert "slabs" in _errors_of(
+        dataclasses.replace(clean, slab_overlap=clean.slab_overlap - 1))
+
+
+def test_mutation_slab_resident_over_budget():
+    clean = _streamed_plan()
+    # merge the cover into one whole-grid slab: still exact, but its
+    # double-buffered resident set is ~3x the grid — far over budget
+    mut = dataclasses.replace(clean, slabs=((0, clean.shape[0]),))
+    assert "slabs" in _errors_of(mut)
+
+
+def test_mutation_non_streamed_plan_carrying_slabs():
+    clean = lower(PAPER_STENCILS["jacobi2d"], backend="ref")
+    assert clean.slabs is None
+    assert "slabs" in _errors_of(
+        dataclasses.replace(clean, slabs=((0, 64),)))
+    assert "slabs" in _errors_of(
+        dataclasses.replace(clean, slab_overlap=2))
+
+
+def test_lint_plan_skips_streamed():
+    # slab-streamed plans execute through eager host staging: layer 2
+    # declares the skip as an info instead of tracing
+    p = _streamed_plan()
+    rep = jaxpr_lint.lint_plan(p)
+    assert rep.ok and any(f.check == "jaxpr-lint" for f in rep.infos)
+    assert any("slab" in f.message for f in rep.infos)

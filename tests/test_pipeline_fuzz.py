@@ -30,7 +30,9 @@ The unmarked tests are the tier-1 fast lane (a handful of cases); the
 ``CASPER_FUZZ_EXAMPLES`` cases *each* (>= 200 total across the two deep
 tests at the default 100).
 """
+import contextlib
 import os
+import zlib
 
 import numpy as np
 import pytest
@@ -90,6 +92,28 @@ def random_pipeline(seed: int, ndim: int, periodic: bool,
     return StencilPipeline(f"fuzz_pipe_{seed}", stages)
 
 
+@contextlib.contextmanager
+def _forced_budget(n_bytes: int):
+    """Scope ``CASPER_SLAB_BUDGET`` for one slabbed lowering+run."""
+    from repro.core import perfmodel as _pm
+    old = os.environ.get(_pm.SLAB_BUDGET_ENV)
+    os.environ[_pm.SLAB_BUDGET_ENV] = str(int(n_bytes))
+    try:
+        yield
+    finally:
+        if old is None:
+            os.environ.pop(_pm.SLAB_BUDGET_ENV, None)
+        else:
+            os.environ[_pm.SLAB_BUDGET_ENV] = old
+
+
+def _slab_budget_for(name: str, nbytes: int) -> int:
+    """A deterministic per-case budget strictly below the grid bytes, so
+    every fuzzed case also streams: the divisor (2-5) comes from a
+    stable hash of the case name, never from Python's salted hash."""
+    return max(1, nbytes // (2 + zlib.crc32(name.encode()) % 4))
+
+
 def _assert_verified(plan) -> None:
     """Every fuzzed plan rides through the static verifier for free:
     ``lower()`` already verified it on the cache miss (warn mode), so
@@ -124,6 +148,16 @@ def check_executors(pipe: StencilPipeline, sweeps: int,
                 got = np.asarray(_plan.run_plan(plan, g32, iters))
                 np.testing.assert_allclose(got, want, atol=1e-4,
                                            err_msg=f"f32 {backend}")
+                with _forced_budget(_slab_budget_for(pipe.name,
+                                                     g32.nbytes)):
+                    slabbed = _plan.lower(pipe, shape, jnp.float32,
+                                          backend=backend, sweeps=sweeps)
+                    _assert_verified(slabbed)
+                    streamed = np.asarray(
+                        _plan.run_plan(slabbed, np.asarray(g32), iters))
+                np.testing.assert_allclose(
+                    streamed, want, atol=1e-4,
+                    err_msg=f"f32 {backend} slab-streamed")
             return
 
         for backend in ("ref", "pallas"):
@@ -140,6 +174,19 @@ def check_executors(pipe: StencilPipeline, sweeps: int,
             scanned = np.asarray(_plan.run_plan(plan, g, iters))
             np.testing.assert_allclose(scanned, want, atol=1e-12,
                                        err_msg=f"{backend} run_plan")
+            # the slab-streamed composition: a budget below the grid
+            # bytes forces the same case onto "stream-from-host"; each
+            # slab runs the same windowed executors as the distributed
+            # path, so bit-identity to the oracle must survive slabbing
+            with _forced_budget(_slab_budget_for(pipe.name, g.nbytes)):
+                slabbed = _plan.lower(pipe, shape, g.dtype,
+                                      backend=backend, sweeps=sweeps)
+                _assert_verified(slabbed)
+                assert slabbed.ghost_strategy == "stream-from-host"
+                streamed = np.asarray(
+                    _plan.run_plan(slabbed, np.asarray(g), iters))
+            np.testing.assert_array_equal(
+                streamed, want, err_msg=f"{backend} slab-streamed")
 
         mesh = Mesh(np.array(jax.devices()[:1]), ("sx",))
         axes = ("sx",) + (None,) * (pipe.ndim - 1)
@@ -176,6 +223,12 @@ REGRESSION_CORPUS = (
     (42, 3, False, 2, 1),
     (57, 3, True, 2, 1),
     (101, 2, False, 4, 1),
+    # slab-streamed coverage (every corpus entry now also runs the
+    # forced-budget leg): rank-3 sweeps=2 makes the overlap deeper than
+    # a single slab under the hashed budget; rank-1 periodic wraps the
+    # slab window gather around both grid ends
+    (163, 3, False, 2, 2),
+    (211, 1, True, 2, 2),
 )
 
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -75,6 +76,34 @@ def iter_pipeline_cases(fast: bool):
                            p, (64, 128), backend, sweeps)
 
 
+def iter_slab_cases(fast: bool):
+    """Slab-streamed variants: each case carries a forced
+    ``CASPER_SLAB_BUDGET`` (a quarter of the f64 grid) that pushes the
+    plan onto the ``"stream-from-host"`` ghost path, so the layer-1 slab
+    invariants (exact cover, ``sweeps*halo`` overlap, per-slab residency)
+    and the layer-2 streamed-plan skip are exercised by the CI gate.
+    Only ref/pallas stream (the vm backend never leaves core)."""
+    import math
+    workloads = [("jacobi1d", "zero"), ("jacobi2d", "periodic"),
+                 ("blur2d", "constant(0.5)"), ("star33_3d", "reflect")]
+    if fast:
+        workloads = workloads[:2]
+    for name, boundary in workloads:
+        spec = PAPER_STENCILS[name].with_boundary(boundary)
+        shape = SHAPES[spec.ndim]
+        budget = math.prod(shape) * 8 // 4
+        for backend in ("ref", "pallas"):
+            for sweeps in SWEEPS if not fast else (1,):
+                yield (f"{name}/{boundary}/slab/{backend}/t{sweeps}",
+                       spec, shape, backend, sweeps, budget)
+    for name, pipe in PAPER_PIPELINES.items():
+        shape = (64, 128)
+        budget = math.prod(shape) * 8 // 4
+        for backend in ("ref", "pallas"):
+            yield (f"{name}/native/slab/{backend}/t1",
+                   pipe, shape, backend, 1, budget)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--strict", action="store_true",
@@ -94,12 +123,24 @@ def main(argv=None) -> int:
     t0 = time.time()
     reports: list[tuple[str, analysis.Report]] = []
     n_err = n_warn = n_info = 0
-    cases = list(iter_spec_cases(args.fast))
-    cases += list(iter_pipeline_cases(args.fast))
-    for label, spec, shape, backend, sweeps in cases:
-        plan = _plan.lower(spec, shape, jnp.float64, backend=backend,
-                           sweeps=sweeps)
-        report = analysis.analyze_plan(plan, lint=not args.no_lint)
+    cases = [c + (None,) for c in iter_spec_cases(args.fast)]
+    cases += [c + (None,) for c in iter_pipeline_cases(args.fast)]
+    cases += list(iter_slab_cases(args.fast))
+    from repro.core import perfmodel as _pm
+    for label, spec, shape, backend, sweeps, budget in cases:
+        old = os.environ.get(_pm.SLAB_BUDGET_ENV)
+        if budget is not None:
+            os.environ[_pm.SLAB_BUDGET_ENV] = str(budget)
+        try:
+            plan = _plan.lower(spec, shape, jnp.float64, backend=backend,
+                               sweeps=sweeps)
+            report = analysis.analyze_plan(plan, lint=not args.no_lint)
+        finally:
+            if budget is not None:
+                if old is None:
+                    os.environ.pop(_pm.SLAB_BUDGET_ENV, None)
+                else:
+                    os.environ[_pm.SLAB_BUDGET_ENV] = old
         reports.append((label, report))
         n_err += len(report.errors)
         n_warn += len(report.warnings)
