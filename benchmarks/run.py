@@ -24,6 +24,8 @@ from benchmarks.pipelines import (bench6_schema_errors,  # noqa: E402
                                   pipelines_bench)
 from benchmarks.serving import (bench5_schema_errors,  # noqa: E402
                                 serving_bench)
+from benchmarks.serving_load import (bench8_schema_errors,  # noqa: E402
+                                     serving_load_bench)
 from benchmarks.slabs import (bench7_schema_errors,  # noqa: E402
                               slabs_bench)
 from benchmarks.stencil_cluster import stencil_cluster_mapping  # noqa: E402
@@ -32,7 +34,7 @@ BENCHES = (
     fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu, fig13_pims,
     fig14_mapping, table4_instructions, temporal_blocking,
     structure_bench, stencil_wallclock, serving_bench, pipelines_bench,
-    slabs_bench, lm_roofline, stencil_cluster_mapping,
+    slabs_bench, serving_load_bench, lm_roofline, stencil_cluster_mapping,
 )
 
 
@@ -81,6 +83,15 @@ def write_bench7(detail: dict, root: str = _ROOT) -> str:
                         "BENCH_7.json", root)
 
 
+def write_bench8(detail: dict, root: str = _ROOT) -> str:
+    """Write the continuous-batching load bench's BENCH_8.json at the
+    repo root (open-loop Poisson sweep: sustained throughput vs the
+    sequential/one-shot baselines, per-point latency percentiles, f64
+    bit-identity leg); schema-checked before writing."""
+    return _write_bench(detail, "bench8", bench8_schema_errors,
+                        "BENCH_8.json", root)
+
+
 def main() -> None:
     out_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "results")
@@ -101,6 +112,8 @@ def main() -> None:
     print(f"# wrote {write_bench6(all_detail['pipelines_bench'])}",
           file=sys.stderr)
     print(f"# wrote {write_bench7(all_detail['slabs_bench'])}",
+          file=sys.stderr)
+    print(f"# wrote {write_bench8(all_detail['serving_load_bench'])}",
           file=sys.stderr)
     summaries = {k: v.get("summary") for k, v in all_detail.items()
                  if isinstance(v, dict) and v.get("summary")}

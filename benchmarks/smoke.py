@@ -6,10 +6,13 @@ distributed temporal-blocking check, the serve
 determinism/decode-count check, and the batched stencil-serving check
 (BENCH_5 schema + the >=1.5x batched-vs-sequential throughput
 acceptance on the bucket-friendly mixed-shape workload + warm
-plan-cache 0-lower/0-autotune pin), and the fused-pipeline check (BENCH_6 schema +
-fused modeled HBM bytes strictly below the stage-by-stage chain + fused
-wallclock beating the unfused chain) — a couple of minutes on a laptop
-CPU.
+plan-cache 0-lower/0-autotune pin), the continuous-batching load check
+(BENCH_8 schema + >=1.5x saturated-vs-sequential sustained throughput
+under open-loop Poisson arrivals + zero low-load deadline misses + f32
+and f64 bit-identity vs serve_sequential), and the fused-pipeline check
+(BENCH_6 schema + fused modeled HBM bytes strictly below the
+stage-by-stage chain + fused wallclock beating the unfused chain) — a
+couple of minutes on a laptop CPU.
 
 The full harness (``benchmarks/run.py``) also runs measured-wallclock and
 256-device subprocess benches; this entry point keeps CI fast and
@@ -278,6 +281,47 @@ def slab_smoke() -> dict:
                 for w in payload["workloads"]}}
 
 
+def serving_load_smoke() -> dict:
+    """Continuous-batching serving under open-loop Poisson load: run the
+    BENCH_8 bench, schema-check its payload, write the BENCH_8.json
+    perf-trajectory artifact, and assert
+
+    * sustained throughput at the saturated load point >= 1.5x the
+      sequential per-request baseline (the acceptance criterion; the
+      bench measures both legs with alternating min-of-reps so a shared
+      CI box's speed shifts land on both sides),
+    * the one-shot batched baseline also >= the sequential baseline
+      (sanity: the static-batching win BENCH_5 gates has not regressed
+      in this harness),
+    * **zero deadline misses** at the low load point (an idle server
+      must meet a 10 s SLO trivially), and
+    * results at every f32 sweep point AND the f64 ``enable_x64`` leg
+      are bit-identical to ``serve_sequential`` on the same request
+      multiset.
+    """
+    from benchmarks.run import write_bench8
+    from benchmarks.serving_load import (bench8_schema_errors,
+                                         serving_load_bench)
+    rows, detail = serving_load_bench()
+    payload = detail["bench8"]
+    errs = bench8_schema_errors(payload)
+    assert not errs, errs
+    path = write_bench8(detail)
+    res = payload["results"]
+    base = payload["baselines"]
+    assert res["saturated_vs_sequential"] >= 1.5, res
+    assert base["batched_oneshot_rps"] >= base["sequential_rps"], base
+    assert res["low_load_deadline_misses"] == 0, res
+    assert res["bit_identical_to_sequential"], res
+    assert payload["f64_check"]["bit_identical_to_sequential"], payload
+    return {"bench8_path": path,
+            "saturated_vs_sequential":
+                round(res["saturated_vs_sequential"], 2),
+            "saturated_p99_ms":
+                round(res["saturated_p99_s"] * 1e3, 2),
+            "sustained_rps": detail["summary"]["sustained_rps"]}
+
+
 def serve_smoke() -> dict:
     """Serve determinism: same key -> same tokens, and exactly
     ``n_tokens - 1`` jitted decode steps per generate call."""
@@ -350,6 +394,11 @@ def main() -> None:
     ssrv = stencil_serving_smoke()
     print(f"stencil_serving_smoke_throughput_ratio,0.000,"
           f"{ssrv['throughput_ratio']}")
+    load = serving_load_smoke()
+    print(f"serving_load_smoke_saturated_vs_sequential,0.000,"
+          f"{load['saturated_vs_sequential']}")
+    print(f"serving_load_smoke_saturated_p99_ms,0.000,"
+          f"{load['saturated_p99_ms']}")
     pipe = pipeline_smoke()
     for n, r in pipe["hbm_reductions"].items():
         print(f"pipeline_smoke_{n}_hbm_reduction,0.000,{r}")
@@ -358,7 +407,8 @@ def main() -> None:
         print(f"slab_smoke_{n}_traffic_overhead,0.000,{r}")
     print(f"# smoke OK: {n_rows} rows, engine parity err {err:.2e}, "
           f"structure {struct}, distributed {dist}, serve {srv}, "
-          f"stencil serving {ssrv}, pipelines {pipe}, slabs {slab}",
+          f"stencil serving {ssrv}, serving load {load}, "
+          f"pipelines {pipe}, slabs {slab}",
           file=sys.stderr)
 
 

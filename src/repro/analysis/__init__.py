@@ -36,11 +36,13 @@ from .jaxpr_lint import (
     slice_budget,
     trace_plan_jaxpr,
 )
+from .serve_check import SHED_POLICIES, check_serve_config
 
 __all__ = [
     "CHECKS", "LINT_CHECKS", "Finding", "PlanVerificationError",
     "PlanVerificationWarning", "Report", "VERIFY_ENV", "VERIFY_MODES",
-    "analyze_plan", "clear_reports", "count_primitive", "counters",
+    "SHED_POLICIES", "analyze_plan", "check_serve_config",
+    "clear_reports", "count_primitive", "counters",
     "lint_plan", "report_for", "set_verify_mode", "slice_budget",
     "summarize_plan", "trace_plan_jaxpr", "verify_and_record",
     "verify_mode", "verify_plan",

@@ -1,0 +1,90 @@
+"""Serve-config sanity checks: the static-analysis layer for the
+continuous-batching scheduler (:mod:`repro.serve.scheduler`).
+
+The plan verifier (:mod:`repro.analysis.verify`) proves every lowered
+:class:`~repro.core.plan.ExecutionPlan` before it runs; this module does
+the same for the *serving* configuration — the admission/bucketing knobs
+a misconfigured deployment would only discover under load.  Checks are
+pure derivations over the config fields and return the same
+:class:`~repro.analysis.verify.Finding` records, so reports compose with
+the plan-analysis tooling.  :class:`repro.serve.scheduler
+.AsyncStencilServer` runs :func:`check_serve_config` at construction:
+``error`` findings raise, ``warning`` findings are emitted as Python
+warnings.
+"""
+from __future__ import annotations
+
+from .verify import Finding
+
+#: Admission policies the scheduler implements past the high-water mark.
+#: ``"reject"`` sheds the *newest* request at admission with a
+#: structured error (open-loop arrivals must never block the submitter).
+SHED_POLICIES = ("reject",)
+
+
+def check_serve_config(config) -> list[Finding]:
+    """Sanity-check a :class:`~repro.serve.scheduler.ServeConfig`.
+
+    Errors (the scheduler refuses to start):
+
+    * ``max_bucket_size`` < 1 — a bucket must admit at least one request;
+    * ``max_wait_s`` < 0 — the close timer cannot be negative;
+    * ``queue_depth`` < ``max_bucket_size`` — the high-water mark must
+      leave room for one full bucket, else no bucket can ever close
+      "full" and every burst sheds;
+    * non-positive ``default_deadline_s``;
+    * an unknown ``shed_policy``.
+
+    Warnings (legal but suspicious):
+
+    * ``max_wait_s`` >= ``default_deadline_s`` — the bucket-close timer
+      alone can consume the whole SLO budget before staging or compute
+      even start;
+    * ``max_wait_s`` more than 100x the modeled per-dispatch overhead
+      with a tiny ``max_bucket_size`` — the timer holds latency hostage
+      for batching the bucket cap cannot deliver.
+    """
+    from repro.core import perfmodel as _pm
+
+    out: list[Finding] = []
+    size = int(config.max_bucket_size)
+    wait = float(config.max_wait_s)
+    depth = int(config.queue_depth)
+    deadline = config.default_deadline_s
+
+    if size < 1:
+        out.append(Finding("serve-config", "error",
+                           f"max_bucket_size must be >= 1, got {size}"))
+    if wait < 0:
+        out.append(Finding("serve-config", "error",
+                           f"max_wait_s must be >= 0, got {wait}"))
+    if size >= 1 and depth < size:
+        out.append(Finding(
+            "serve-config", "error",
+            f"queue_depth {depth} is below max_bucket_size {size}: the "
+            f"high-water mark must fit one full bucket or no bucket can "
+            f"ever close full"))
+    if deadline is not None and not deadline > 0:
+        out.append(Finding(
+            "serve-config", "error",
+            f"default_deadline_s must be positive when set, got "
+            f"{deadline}"))
+    if config.shed_policy not in SHED_POLICIES:
+        out.append(Finding(
+            "serve-config", "error",
+            f"unknown shed_policy {config.shed_policy!r}; expected one "
+            f"of {SHED_POLICIES}"))
+
+    if deadline is not None and deadline > 0 and wait >= deadline:
+        out.append(Finding(
+            "serve-config", "warning",
+            f"max_wait_s {wait} >= default_deadline_s {deadline}: the "
+            f"bucket-close timer alone can consume the whole SLO budget"))
+    if (size >= 1 and size <= 2
+            and wait > 100 * _pm.SERVE_DISPATCH_OVERHEAD_S):
+        out.append(Finding(
+            "serve-config", "warning",
+            f"max_wait_s {wait} holds requests for batching a "
+            f"max_bucket_size of {size} cannot amortize (modeled "
+            f"per-dispatch overhead {_pm.SERVE_DISPATCH_OVERHEAD_S})"))
+    return out

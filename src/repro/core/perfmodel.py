@@ -456,6 +456,65 @@ def pallas_pipeline_tile_cost(pipeline, shape: tuple[int, ...],
 
 
 # ----------------------------------------------------------------------------
+# Serving: bucket-close cost heuristic (continuous-batching scheduler)
+# ----------------------------------------------------------------------------
+#: Per-bucket host-side dispatch overhead: jitted-call entry, transfer
+#: setup, result scatter.  CALIBRATED to the BENCH_5 sequential-vs-
+#: batched gap on CPU hosts (each sequential request pays roughly this
+#: much on top of its compute; a bucket pays it once).
+SERVE_DISPATCH_OVERHEAD_S = 150e-6
+
+#: Slack multiplier on the expected bucket fill time.  Offered load is
+#: what the arrival process schedules, not what the admission path
+#: achieves: submission jitter (sleep overshoot, GIL hand-offs) makes
+#: the realized arrival rate lag the offered rate under saturation, and
+#: a timer set to the *nominal* fill time then closes buckets short of
+#: the cap.  CALIBRATED against the BENCH_8 saturated sweep, where 3x
+#: keeps the hot bucket closing "full" at the achieved (not offered)
+#: rate.
+SERVE_FILL_SLACK = 3.0
+
+
+def bucket_close_wait_s(offered_rate_rps: float, max_bucket_size: int,
+                        *, deadline_s: float | None = None,
+                        dispatch_overhead_s: float =
+                        SERVE_DISPATCH_OVERHEAD_S) -> float:
+    """How long the admission queue should hold a bucket open before
+    closing it short — the ``max_wait`` knob of
+    :class:`repro.serve.scheduler.ServeConfig`, derived first-order like
+    every other model in this module.
+
+    Holding a bucket open ``w`` seconds gathers ``~rate * w`` more
+    same-key requests; each one folded into the bucket saves one
+    per-dispatch overhead.  Against that, every queued request pays
+    ``w`` of added latency.  Three bounds follow:
+
+    * the expected **fill time** ``max_bucket_size / rate`` (with
+      ``SERVE_FILL_SLACK`` headroom for the gap between offered and
+      achieved arrival rate) — past it the bucket would have closed
+      full anyway, so waiting longer buys nothing;
+    * the total overhead a full bucket can amortize,
+      ``max_bucket_size * dispatch_overhead_s`` — waiting longer than
+      the whole saving is a guaranteed net latency loss;
+    * half the SLO budget, when one is given — the bucket wait must
+      leave room for staging + compute.
+
+    Floored at one dispatch overhead (a shorter timer just burns wakeups
+    without ever coalescing anything).
+    """
+    if max_bucket_size < 1:
+        raise ValueError(
+            f"max_bucket_size must be >= 1, got {max_bucket_size}")
+    rate = max(float(offered_rate_rps), 1e-9)
+    fill_s = SERVE_FILL_SLACK * max_bucket_size / rate
+    amortized_s = max_bucket_size * dispatch_overhead_s
+    wait = max(min(fill_s, amortized_s), dispatch_overhead_s)
+    if deadline_s is not None:
+        wait = min(wait, deadline_s / 2.0)
+    return wait
+
+
+# ----------------------------------------------------------------------------
 # GPU / PIMS models
 # ----------------------------------------------------------------------------
 def gpu_sweep(spec: StencilSpec, shape: tuple[int, ...]) -> SweepCost:

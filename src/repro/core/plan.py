@@ -784,14 +784,24 @@ def runner(spec: StencilSpec, backend: str, sweeps: int, tile_req,
 
 @functools.lru_cache(maxsize=512)
 def batch_runner(spec: StencilSpec, backend: str, sweeps: int, tile_req,
-                 interpret: bool):
+                 interpret: bool, donate: bool = False):
     """Process-wide jitted ``run(grids, iters)`` over a stacked batch of
     same-shaped grids: one plan lowered for the element shape, one
     vmapped fused call for the whole bucket (the serving front-end's
     execution primitive).  Slab-streamed element shapes fall back to an
-    eager per-grid host-staging loop — the serving front-end reports
-    those requests under a distinct stat instead of the bucket path."""
-    @functools.partial(jax.jit, static_argnames=("iters",))
+    eager per-grid host-streaming loop — the serving front-end reports
+    those requests under a distinct stat instead of the bucket path.
+
+    ``donate=True`` donates the stacked input buffer to the fused call
+    (off-CPU — the CPU backend cannot alias donated buffers, same policy
+    as :mod:`repro.kernels.stream`): the continuous-batching server
+    stages each bucket onto the device once and never touches the
+    staging buffer again, so the output may reuse it in place."""
+    donate_argnums = ((0,) if donate and jax.default_backend() != "cpu"
+                      else ())
+
+    @functools.partial(jax.jit, static_argnames=("iters",),
+                       donate_argnums=donate_argnums)
     def run_jit(grids, iters: int):
         plan = lower(spec, grids.shape[1:], grids.dtype, backend=backend,
                      sweeps=sweeps, tile=tile_req, interpret=interpret)
@@ -806,6 +816,62 @@ def batch_runner(spec: StencilSpec, backend: str, sweeps: int, tile_req,
                                  for g in np.asarray(grids)])
         return run_jit(grids, iters=iters)
     return run
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchHandle:
+    """Async-friendly three-phase handle over the jitted batch runner —
+    the continuous-batching server's execution primitive
+    (:mod:`repro.serve.scheduler`).
+
+    ``stage`` puts one bucket's stacked host grids on the device and
+    ``dispatch`` launches the vmapped fused call on a staged buffer;
+    both return as soon as the work is *enqueued* (jax async dispatch),
+    so the caller can stage bucket ``k+1`` while bucket ``k`` computes —
+    the upload/compute overlap proven by the slab-streaming executor
+    (:mod:`repro.kernels.stream`), applied to serving buckets.  Only
+    ``fetch`` blocks (device sync + one transfer back).
+
+    Dispatch donates the staged buffer (off-CPU): after ``dispatch(s)``
+    the buffer ``s`` is consumed and must not be reused.
+    """
+
+    spec: StencilSpec | StencilPipeline
+    backend: str
+    sweeps: int
+    tile_request: object
+    interpret: bool
+
+    def stage(self, grids: Sequence):
+        """Stack one bucket and start its host→device transfer; returns
+        the (async) device buffer.  Host arrays stack on the host first —
+        one transfer per bucket, not one per request."""
+        if all(isinstance(g, np.ndarray) for g in grids):
+            return jax.device_put(np.stack(grids))
+        return jnp.stack([jnp.asarray(g) for g in grids])
+
+    def dispatch(self, staged, iters: int):
+        """Launch the bucket's vmapped fused call on a staged device
+        buffer (donated — ``staged`` is consumed); returns the async
+        device result."""
+        run = batch_runner(self.spec, self.backend, self.sweeps,
+                           self.tile_request, self.interpret, True)
+        return run(staged, iters=iters)
+
+    def fetch(self, result) -> np.ndarray:
+        """Block on the device result and bring it back to the host."""
+        return np.asarray(result)
+
+
+def batch_handle(spec: StencilSpec | StencilPipeline, backend: str,
+                 sweeps: int, tile_req, interpret: bool | None
+                 ) -> BatchHandle:
+    """The :class:`BatchHandle` for one engine configuration (cheap
+    value object; the jitted runner behind it is the process-wide
+    :func:`batch_runner` cache entry)."""
+    return BatchHandle(spec, backend, sweeps,
+                       canonical_tile_request(tile_req),
+                       resolve_interpret(interpret))
 
 
 def runner_cache_stats() -> dict:

@@ -1,4 +1,14 @@
 from .engine import ServeEngine
-from .stencil import StencilRequest, StencilServer, ServeStats
+from .stencil import (RequestError, ServeStats, StencilRequest,
+                      StencilServer)
+from .scheduler import (AsyncStencilServer, RequestHandle, RequestRejected,
+                        ServeConfig)
+from .loadgen import (TimedRequest, mixed_requests, poisson_times,
+                      poisson_workload, submit_open_loop)
 
-__all__ = ["ServeEngine", "StencilRequest", "StencilServer", "ServeStats"]
+__all__ = [
+    "AsyncStencilServer", "RequestError", "RequestHandle",
+    "RequestRejected", "ServeConfig", "ServeEngine", "ServeStats",
+    "StencilRequest", "StencilServer", "TimedRequest", "mixed_requests",
+    "poisson_times", "poisson_workload", "submit_open_loop",
+]

@@ -1,0 +1,100 @@
+"""Open-loop load generation for the continuous-batching server.
+
+Arrivals follow a seeded Poisson process (exponential inter-arrival
+gaps) and are **open-loop**: the generator submits on schedule whether
+or not the server has kept up, so saturation shows up as growing queue
+latency and shed requests instead of silently throttled offered load —
+the methodology BENCH_8 (``benchmarks/serving_load.py``) sweeps.
+
+Lives under :mod:`repro.serve` (not under ``benchmarks/``) so tests can
+import it with only ``src`` on ``PYTHONPATH``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from .scheduler import AsyncStencilServer, RequestHandle
+from .stencil import StencilRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class TimedRequest:
+    """One scheduled arrival: submit ``request`` at ``at_s`` seconds
+    after the load run starts."""
+
+    at_s: float
+    request: StencilRequest
+
+
+def mixed_requests(n: int = 64, seed: int = 7,
+                   dtype=np.float32) -> list[StencilRequest]:
+    """BENCH_5's serving mix, scaled to ``n`` requests: three quarters
+    hot ``jacobi2d (32, 64)`` traffic (the bucket batching exists for)
+    plus ``advect2d`` / ``jacobi1d`` / ``heat3d`` heterogeneity in
+    BENCH_5's 48:8:6:2 proportions.  Deterministic in ``seed`` — the
+    same ``(n, seed, dtype)`` always yields the same request multiset,
+    which the bit-identity tests rely on."""
+    rng = np.random.default_rng(seed)
+
+    def grid(shape):
+        return rng.standard_normal(shape).astype(dtype)
+
+    counts = {
+        "jacobi2d": max(n - (n // 8 + max(n // 11, 1) + max(n // 32, 1)),
+                        1),
+        "advect2d": n // 8,
+        "jacobi1d": max(n // 11, 1),
+        "heat3d": max(n // 32, 1),
+    }
+    shapes = {"jacobi2d": (32, 64), "advect2d": (32, 64),
+              "jacobi1d": (512,), "heat3d": (8, 12, 16)}
+    iters = {"jacobi2d": 8, "advect2d": 8, "jacobi1d": 6, "heat3d": 4}
+    reqs = [StencilRequest(name, grid(shapes[name]), iters[name])
+            for name, count in counts.items() for _ in range(count)]
+    order = rng.permutation(len(reqs))
+    return [reqs[i] for i in order]
+
+
+def poisson_times(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
+    """``n`` Poisson arrival offsets (seconds, ascending) at an offered
+    load of ``rate_rps`` requests/s."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+
+
+def poisson_workload(requests: Sequence[StencilRequest],
+                     rate_rps: float, seed: int = 0) -> list[TimedRequest]:
+    """Schedule ``requests`` (in order) on a seeded Poisson arrival
+    process at ``rate_rps``."""
+    times = poisson_times(len(requests), rate_rps, seed)
+    return [TimedRequest(float(t), r) for t, r in zip(times, requests)]
+
+
+def submit_open_loop(server: AsyncStencilServer,
+                     workload: Sequence[TimedRequest], *,
+                     deadline_s: float | None = None
+                     ) -> list[RequestHandle]:
+    """Replay ``workload`` against a running server on its arrival
+    schedule (sleeping between arrivals; never waiting on the server —
+    open loop), returning the handles in submission order."""
+    handles = []
+    t0 = time.perf_counter()
+    for timed in workload:
+        # hold the schedule without distorting it: time.sleep costs tens
+        # of microseconds of overshoot, which at high offered load is
+        # longer than the inter-arrival gap itself — so sleep only for
+        # coarse waits and spin out the sub-millisecond remainder
+        while True:
+            delay = timed.at_s - (time.perf_counter() - t0)
+            if delay <= 0:
+                break
+            if delay > 1e-3:
+                time.sleep(delay - 5e-4)
+        handles.append(server.submit(timed.request, deadline_s=deadline_s))
+    return handles

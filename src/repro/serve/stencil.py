@@ -61,9 +61,39 @@ class StencilRequest:
     iters: int
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestError:
+    """Structured per-request admission error: a request that fails
+    validation (or is shed under backpressure) gets one of these in its
+    results slot instead of poisoning the whole call — earlier and later
+    requests in the same batch still execute."""
+
+    spec_name: str
+    error: str                  # "unknown-spec" | "rank-mismatch" |
+                                # "invalid-grid" | "invalid-iters" |
+                                # "shed" | "internal"
+    message: str
+
+
+#: Minimum timed-section length used as a throughput denominator: a
+#: section faster than the perf_counter tick must not report 0.0
+#: requests/s (the clock simply could not see it), so rates divide by at
+#: least one clock resolution.
+_CLOCK_TICK = max(float(time.get_clock_info("perf_counter").resolution),
+                  1e-9)
+
+
+def _throughput(count: float, seconds: float) -> float:
+    """``count / seconds`` with the denominator clamped to the
+    perf_counter resolution — a timed section faster than the clock tick
+    reports the highest *observable* rate instead of silently 0.0."""
+    return count / max(seconds, _CLOCK_TICK)
+
+
 @dataclasses.dataclass
 class ServeStats:
-    """What one ``serve`` call did, for dashboards and assertions."""
+    """What one ``serve`` call (or one continuous-serving window) did,
+    for dashboards and assertions."""
 
     n_requests: int
     n_buckets: int
@@ -77,6 +107,21 @@ class ServeStats:
                                 # exceeded CASPER_SLAB_BUDGET): these
                                 # bypass the vmapped bucket path and run
                                 # per request through kernels.stream
+    n_rejected: int = 0         # failed admission validation (their
+                                # results slot holds a RequestError)
+    n_shed: int = 0             # rejected under backpressure (queue past
+                                # the high-water mark; continuous server)
+    n_deadline_missed: int = 0  # completed past their SLO deadline
+                                # (continuous server)
+    latency_s: dict | None = None
+                                # per-request submit->complete latency
+                                # percentiles: p50/p95/p99/max/mean
+                                # (continuous server; None for one-shot
+                                # calls, whose requests all "arrive" at
+                                # t0)
+    close_reasons: dict | None = None
+                                # bucket-close counts: full/timeout/drain
+                                # (continuous server)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -117,6 +162,30 @@ class StencilServer:
         """Make ``spec`` servable under ``spec.name``."""
         self.specs[spec.name] = spec
 
+    # -- admission ----------------------------------------------------------
+    def validate_request(self, req: StencilRequest) -> RequestError | None:
+        """Admission-time validation: ``None`` when ``req`` is servable,
+        else a structured :class:`RequestError` (never an exception — a
+        bad request must not fail requests admitted alongside it)."""
+        spec = self.specs.get(req.spec_name)
+        if spec is None:
+            return RequestError(req.spec_name, "unknown-spec",
+                                f"no spec registered under "
+                                f"{req.spec_name!r}")
+        shape = getattr(req.grid, "shape", None)
+        if shape is None or getattr(req.grid, "dtype", None) is None:
+            return RequestError(req.spec_name, "invalid-grid",
+                                "request grid has no shape/dtype")
+        if len(shape) != spec.ndim:
+            return RequestError(
+                req.spec_name, "rank-mismatch",
+                f"request grid rank {len(shape)} != {req.spec_name} ndim "
+                f"{spec.ndim}")
+        if int(req.iters) < 0:
+            return RequestError(req.spec_name, "invalid-iters",
+                                f"iters must be >= 0, got {req.iters}")
+        return None
+
     # -- bucketing ----------------------------------------------------------
     def bucket_key(self, req: StencilRequest) -> tuple:
         """The grouping key: the request's plan-cache key + ``iters``.
@@ -131,10 +200,11 @@ class StencilServer:
                               self.sweeps, self.tile_request,
                               self.interpret) + (int(req.iters),)
 
-    def _buckets(self, requests: Sequence[StencilRequest]) -> dict:
+    def _buckets(self, requests: Sequence[StencilRequest],
+                 idxs: Sequence[int]) -> dict:
         buckets: dict[tuple, list[int]] = {}
-        for i, req in enumerate(requests):
-            buckets.setdefault(self.bucket_key(req), []).append(i)
+        for i in idxs:
+            buckets.setdefault(self.bucket_key(requests[i]), []).append(i)
         return buckets
 
     # -- execution ----------------------------------------------------------
@@ -148,14 +218,28 @@ class StencilServer:
         call; the plan (factorization, ghost strategy, tile,
         decomposition) is lowered at most once per novel bucket and
         served from the process-wide cache afterwards.
+
+        Every request is validated **at admission**: an invalid one
+        (unknown spec, rank mismatch, negative iters) gets a
+        :class:`RequestError` in its results slot and is counted in
+        ``stats.n_rejected`` — it never fails the call, and the valid
+        requests around it execute normally.
         """
         before = _plan.plan_cache_stats()
         results: list = [None] * len(requests)
+        valid = []
+        for i, req in enumerate(requests):
+            err = self.validate_request(req)
+            if err is not None:
+                results[i] = err
+            else:
+                valid.append(i)
+        n_rejected = len(requests) - len(valid)
         bucket_stats = []
         points = 0
         n_slab_streamed = 0
         t0 = time.perf_counter()
-        for key, idxs in self._buckets(requests).items():
+        for key, idxs in self._buckets(requests, valid).items():
             spec = self.specs[requests[idxs[0]].spec_name]
             iters = requests[idxs[0]].iters
             grids = [requests[i].grid for i in idxs]
@@ -213,11 +297,12 @@ class StencilServer:
         stats = ServeStats(
             n_requests=len(requests), n_buckets=len(bucket_stats),
             seconds=seconds,
-            requests_per_s=len(requests) / seconds if seconds else 0.0,
-            points_per_s=points / seconds if seconds else 0.0,
+            requests_per_s=_throughput(len(requests), seconds),
+            points_per_s=_throughput(points, seconds),
             batched=True,
             plan_cache=_cache_delta(before, _plan.plan_cache_stats()),
-            buckets=bucket_stats, n_slab_streamed=n_slab_streamed)
+            buckets=bucket_stats, n_slab_streamed=n_slab_streamed,
+            n_rejected=n_rejected)
         return results, stats
 
     def serve_sequential(self, requests: Sequence[StencilRequest]
@@ -225,12 +310,19 @@ class StencilServer:
         """The per-request baseline: every request is its own dispatch
         through the (shared, cached) single-grid runner.  Same plans,
         same results — only the batching differs, which is exactly what
-        ``BENCH_5`` measures."""
+        ``BENCH_5`` measures.  Admission validation matches ``serve``:
+        invalid requests carry a :class:`RequestError` results slot."""
         before = _plan.plan_cache_stats()
         results: list = []
         points = 0
+        n_rejected = 0
         t0 = time.perf_counter()
         for req in requests:
+            err = self.validate_request(req)
+            if err is not None:
+                results.append(err)
+                n_rejected += 1
+                continue
             spec = self.specs[req.spec_name]
             grid = jnp.asarray(req.grid)
             run = _plan.runner(spec, self.backend, self.sweeps,
@@ -240,11 +332,11 @@ class StencilServer:
             results.append(out)
         seconds = time.perf_counter() - t0
         stats = ServeStats(
-            n_requests=len(requests), n_buckets=len(requests),
+            n_requests=len(requests), n_buckets=len(requests) - n_rejected,
             seconds=seconds,
-            requests_per_s=len(requests) / seconds if seconds else 0.0,
-            points_per_s=points / seconds if seconds else 0.0,
+            requests_per_s=_throughput(len(requests), seconds),
+            points_per_s=_throughput(points, seconds),
             batched=False,
             plan_cache=_cache_delta(before, _plan.plan_cache_stats()),
-            buckets=[])
+            buckets=[], n_rejected=n_rejected)
         return results, stats

@@ -78,15 +78,54 @@ def test_serve_pallas_backend_bucket(rng):
 
 
 def test_request_validation(rng):
-    server = StencilServer()
-    with pytest.raises(KeyError):
-        server.serve([StencilRequest("nope", np.zeros((4, 4), np.float32),
-                                     1)])
-    with pytest.raises(ValueError):
-        server.serve([StencilRequest("jacobi2d", np.zeros(8, np.float32),
-                                     1)])
+    """Invalid requests are rejected per-request at admission with a
+    structured error in their results slot — never a raw KeyError after
+    earlier buckets already executed — and the valid requests around
+    them still run."""
+    server = StencilServer(backend="ref", sweeps=1)
+    good = rng.standard_normal((12, 16)).astype(np.float32)
+    reqs = [
+        StencilRequest("jacobi2d", good, 2),
+        StencilRequest("nope", np.zeros((4, 4), np.float32), 1),
+        StencilRequest("jacobi2d", np.zeros(8, np.float32), 1),  # rank
+        StencilRequest("jacobi2d", good, -1),                    # iters
+        StencilRequest("jacobi2d", good, 2),
+    ]
+    for serve in (server.serve, server.serve_sequential):
+        results, stats = serve(reqs)
+        assert stats.n_requests == 5
+        assert stats.n_rejected == 3
+        assert [getattr(r, "error", None) for r in results] == \
+            [None, "unknown-spec", "rank-mismatch", "invalid-iters", None]
+        want = cref.run_iterations(default_specs()["jacobi2d"],
+                                   jnp.asarray(good), 2)
+        np.testing.assert_allclose(results[0], np.asarray(want), atol=1e-5)
+        np.testing.assert_allclose(results[4], np.asarray(want), atol=1e-5)
+    # constructor misuse still raises, and bucket_key (an internal,
+    # post-admission API) still refuses a rank-mismatched request
     with pytest.raises(ValueError):
         StencilServer(sweeps=0)
+    with pytest.raises(ValueError):
+        server.bucket_key(StencilRequest("jacobi2d",
+                                         np.zeros(8, np.float32), 1))
+
+
+def test_throughput_clamps_denominator_to_clock_tick(rng, monkeypatch):
+    """A timed section faster than the perf_counter resolution must not
+    report 0.0 requests/s: the denominator clamps to one clock tick."""
+    from repro.serve import stencil as _st
+    assert _st._throughput(10, 0.0) > 0
+    assert _st._throughput(10, 0.0) == 10 / _st._CLOCK_TICK
+    # a frozen clock (every perf_counter() call identical) end to end
+    monkeypatch.setattr(_st.time, "perf_counter", lambda: 1234.5)
+    server = StencilServer(backend="ref", sweeps=1)
+    reqs = [StencilRequest("jacobi1d",
+                           rng.standard_normal(32).astype(np.float32), 2)]
+    for serve in (server.serve, server.serve_sequential):
+        _, stats = serve(reqs)
+        assert stats.seconds == 0.0
+        assert stats.requests_per_s > 0
+        assert stats.points_per_s > 0
 
 
 def test_serve_pipeline_requests_bucket_and_match_oracle(rng):
