@@ -11,8 +11,10 @@ plan-cache 0-lower/0-autotune pin), the continuous-batching load check
 under open-loop Poisson arrivals + zero low-load deadline misses + f32
 and f64 bit-identity vs serve_sequential), and the fused-pipeline check
 (BENCH_6 schema + fused modeled HBM bytes strictly below the
-stage-by-stage chain + fused wallclock beating the unfused chain) — a
-couple of minutes on a laptop CPU.
+stage-by-stage chain + fused wallclock beating the unfused chain), and
+the roofline-calibration check (BENCH_9 schema + calibrated analytic
+tile ranking agreeing with the measured ranking per backend + sane
+roofline fractions) — a couple of minutes on a laptop CPU.
 
 The full harness (``benchmarks/run.py``) also runs measured-wallclock and
 256-device subprocess benches; this entry point keeps CI fast and
@@ -45,9 +47,8 @@ SMOKE_BENCHES = (fig01_roofline, fig10_speedup, fig11_energy, fig12_gpu,
 
 
 _DIST_CODE = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                               + os.environ.get("XLA_FLAGS", ""))
+    from repro.configs import env as _env
+    _env.set_cpu_cores(8)
     import json
     import numpy as np
     import jax, jax.numpy as jnp
@@ -322,6 +323,42 @@ def serving_load_smoke() -> dict:
             "sustained_rps": detail["summary"]["sustained_rps"]}
 
 
+def roofline_calibration_smoke() -> dict:
+    """Measured roofline calibration end to end: run the BENCH_9
+    calibration bench on a reduced matrix (one workload, top-2 tiles),
+    schema-check its payload, write the BENCH_9.json perf-trajectory
+    artifact, and assert
+
+    * the calibrated analytic top tile agrees with the measured tile
+      ranking (ties allowed) for every (workload, backend) cell — the
+      acceptance criterion that makes the cost models *measured*,
+    * every achieved roofline fraction is finite and within the loose
+      interpret-mode sanity bounds (0, 64], and
+    * the fitted calibration carries a positive measured bandwidth.
+    """
+    from benchmarks.roofline_stencil import (bench9_schema_errors,
+                                             roofline_stencil_bench)
+    from benchmarks.run import write_bench9
+    rows, detail = roofline_stencil_bench(
+        reps=2, top_k=2, workloads=(("jacobi2d", (96, 128), 2),),
+        bandwidth_mbytes=16)
+    payload = detail["bench9"]
+    errs = bench9_schema_errors(payload)
+    assert not errs, errs
+    path = write_bench9(detail)
+    assert detail["summary"]["all_agree"], detail["summary"]
+    for c in payload["workloads"]:
+        frac = c["roofline"]["roofline_fraction"]
+        assert 0.0 < frac <= 64.0, (c["backend"], frac)
+        bw = [v for k, v in c["calibration"].items() if k.endswith("_bw")]
+        assert bw and bw[0] > 0, c["calibration"]
+    return {"bench9_path": path,
+            "backends": payload["backends"],
+            "roofline_fractions": {
+                k: round(v, 2)
+                for k, v in detail["summary"]["roofline_fractions"].items()}}
+
+
 def serve_smoke() -> dict:
     """Serve determinism: same key -> same tokens, and exactly
     ``n_tokens - 1`` jitted decode steps per generate call."""
@@ -405,10 +442,13 @@ def main() -> None:
     slab = slab_smoke()
     for n, r in slab["traffic_overheads"].items():
         print(f"slab_smoke_{n}_traffic_overhead,0.000,{r}")
+    roof = roofline_calibration_smoke()
+    for n, r in roof["roofline_fractions"].items():
+        print(f"roofline_smoke_{n.replace('/', '_')}_fraction,0.000,{r}")
     print(f"# smoke OK: {n_rows} rows, engine parity err {err:.2e}, "
           f"structure {struct}, distributed {dist}, serve {srv}, "
           f"stencil serving {ssrv}, serving load {load}, "
-          f"pipelines {pipe}, slabs {slab}",
+          f"pipelines {pipe}, slabs {slab}, roofline {roof}",
           file=sys.stderr)
 
 

@@ -34,8 +34,8 @@ FUSED_SWEEPS = 4
 FUSED_ITERS = 4
 
 _CODE = textwrap.dedent(f"""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+    from repro.configs import env as _env
+    _env.set_cpu_cores(256)
     import json
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -266,7 +266,7 @@ def lint_plan(plan, hbm: bool | None = None) -> Report:
     findings += lint_fma_contraction(plan)
     if hbm is None:
         hbm = (plan.is_pipeline and plan.fused
-               and plan.backend == "pallas"
+               and plan.backend in _plan.KERNEL_BACKENDS
                and plan.boundary_mode != "periodic")
     if hbm:
         findings += lint_hbm(plan)

@@ -253,12 +253,13 @@ def _check_decompose(plan) -> list[Finding]:
 
 @_check("tile-legality")
 def _check_tile(plan) -> list[Finding]:
-    """Only fused Pallas plans carry a resolved tile; its rank matches
-    the grid, entries are positive, and a non-periodic pad-free kernel's
-    clamped fetch needs ``window <= grid`` per dim (else lowering should
-    have fallen back to the padded window)."""
+    """Only fused kernel-backend plans (pallas / triton) carry a
+    resolved tile; its rank matches the grid, entries are positive, and
+    a non-periodic pad-free kernel's clamped fetch needs
+    ``window <= grid`` per dim (else lowering should have fallen back
+    to the padded window)."""
     out = []
-    needs_tile = plan.backend == "pallas" and plan.fused
+    needs_tile = plan.backend in _plan.KERNEL_BACKENDS and plan.fused
     if not needs_tile:
         if plan.tile is not None:
             out.append(Finding(
@@ -268,7 +269,7 @@ def _check_tile(plan) -> list[Finding]:
         return out
     if plan.tile is None:
         return [Finding("tile-legality", "error",
-                        "fused pallas plan has no resolved tile")]
+                        f"fused {plan.backend} plan has no resolved tile")]
     if len(plan.tile) != len(plan.shape):
         return [Finding(
             "tile-legality", "error",
@@ -291,24 +292,39 @@ def _check_tile(plan) -> list[Finding]:
 def _check_vmem(plan) -> list[Finding]:
     """The fused kernel's resident set — window, accumulator, per-term
     intermediates, output block, plus the whole grid for a periodic
-    pad-free wrap gather — must fit VMEM (perfmodel's residency math)."""
-    if not (plan.backend == "pallas" and plan.fused
+    pad-free wrap gather — must fit the backend's scratch memory:
+    VMEM for the mosaic (``"pallas"``) lowering, one SM's shared
+    memory for ``"triton"`` (whose periodic whole-grid block streams
+    through L2, so it is *not* charged against shared memory).  The
+    shared-memory bound applies to *compiled* triton plans only: an
+    interpret-mode plan executes on CPU, where the 96 KiB budget is
+    vacuous — deep-sweep f64 windows that could never compile on a GPU
+    must still run in the CI correctness matrix (pass ``tile="auto"``
+    on real hardware; the GPU autotuner rejects infeasible tiles)."""
+    if not (plan.backend in _plan.KERNEL_BACKENDS and plan.fused
             and plan.tile is not None):
+        return []
+    if plan.backend == "triton" and plan.interpret:
         return []
     itemsize = np.dtype(plan.dtype).itemsize
     n_terms = max(
         (1 if s.factorization.compute_terms is None
          else len(s.factorization.compute_terms)) for s in plan.stages)
-    grid_shape = (plan.shape if plan.ghost_strategy == "pad-free"
-                  and plan.boundary_mode == "periodic" else None)
+    if plan.backend == "triton":
+        budget, budget_name, grid_shape = (
+            _pm.GPU_SMEM_BYTES, "GPU shared memory", None)
+    else:
+        budget, budget_name = _pm.TPU_VMEM_BYTES, "VMEM"
+        grid_shape = (plan.shape if plan.ghost_strategy == "pad-free"
+                      and plan.boundary_mode == "periodic" else None)
     vmem = _pm.vmem_residency(
         plan.tile, plan.halo, plan.sweeps, itemsize, n_terms,
         boundary_mode=plan.boundary_mode, shape=grid_shape)
-    if vmem > _pm.TPU_VMEM_BYTES:
+    if vmem > budget:
         return [Finding(
             "vmem-budget", "error",
-            f"resident set {vmem} B exceeds VMEM "
-            f"{_pm.TPU_VMEM_BYTES} B (tile={plan.tile}, "
+            f"resident set {vmem} B exceeds {budget_name} "
+            f"{budget} B (tile={plan.tile}, "
             f"window={_pm.tile_window(plan.tile, plan.halo, plan.sweeps)}, "
             f"terms={n_terms})")]
     return []
@@ -334,7 +350,7 @@ def _check_ghost(plan) -> list[Finding]:
     if plan.is_pipeline and not plan.fused:
         expected = "staged"
     elif (over_budget and not plan.is_distributed
-          and plan.backend in ("ref", "pallas")):
+          and plan.backend in ("ref",) + _plan.KERNEL_BACKENDS):
         expected = "stream-from-host"
     elif plan.backend == "ref":
         expected = "pad"
@@ -345,7 +361,7 @@ def _check_ghost(plan) -> list[Finding]:
     else:
         expected = _plan.ghost_strategy_for(
             plan.spec, plan.shape, np.dtype(plan.dtype).itemsize,
-            plan.sweeps, plan.tile)
+            plan.sweeps, plan.tile, backend=plan.backend)
     if g != expected:
         return [Finding(
             "ghost-strategy", "error",

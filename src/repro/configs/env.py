@@ -1,0 +1,84 @@
+"""Computation-environment configuration helpers (platform, precision,
+host-device count, debug flags).
+
+One home for the ad-hoc ``jax.config`` / ``XLA_FLAGS`` fiddling the
+benchmarks used to do inline: the bit-identity matrix needs x64, the
+distributed smokes need a forced host-device count, and a GPU run wants
+the documented XLA performance flags.  All of these only take full
+effect **before** jax initializes its backends, so benchmark entry
+points call them at the top of ``main()`` (the benchmark runner and the
+roofline-calibration bench both do).
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from multiprocessing import cpu_count
+
+import jax
+
+# The documented GPU performance flags
+# (https://jax.readthedocs.io/en/latest/gpu_performance_tips.html):
+# triton-backed fusions on, async collectives + latency-hiding
+# scheduling for the distributed path.
+GPU_XLA_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true "
+    "--xla_gpu_triton_gemm_any=True "
+    "--xla_gpu_enable_async_collectives=true "
+    "--xla_gpu_enable_latency_hiding_scheduler=true "
+    "--xla_gpu_enable_highest_priority_async_stream=true"
+)
+
+
+def jax_enable_x64(use_x64: bool = True) -> None:
+    """Toggle 64-bit array precision (the f64 bit-identity matrix and
+    every oracle comparison in ``benchmarks/`` require it on)."""
+    if not use_x64:
+        use_x64 = bool(os.getenv("JAX_ENABLE_X64", 0))
+    jax.config.update("jax_enable_x64", use_x64)
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pin the jax platform to ``'cpu'``, ``'gpu'`` or ``'tpu'``.
+
+    Only takes full effect before the first jax computation.  On GPU the
+    documented XLA performance flags (:data:`GPU_XLA_FLAGS`) are
+    appended to ``XLA_FLAGS`` so pallas-triton and XLA fusions run with
+    async collectives and latency-hiding scheduling enabled.
+    """
+    if platform not in ("cpu", "gpu", "tpu"):
+        raise ValueError(f"unknown platform {platform!r}")
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        have = os.environ.get("XLA_FLAGS", "")
+        missing = " ".join(f for f in GPU_XLA_FLAGS.split() if f not in have)
+        if missing:
+            os.environ["XLA_FLAGS"] = (have + " " + missing).strip()
+
+
+def set_cpu_cores(n: int) -> None:
+    """Expose ``n`` forced host devices on the CPU platform (the
+    distributed smokes' 8-device mesh, the 256-device cluster-mapping
+    bench).  Host devices are virtual — ``n`` may exceed the physical
+    core count (a warning notes the oversubscription; compute then
+    time-slices, which is fine for compile-only/HLO-counting runs).
+    Must run before jax initializes its backends."""
+    n = int(n)
+    total = cpu_count()
+    if n > total:
+        warnings.warn(
+            f"forcing {n} host devices on {total} CPUs: compute will "
+            "time-slice (fine for compile/HLO analysis)", Warning,
+            stacklevel=2)
+    have = os.environ.get("XLA_FLAGS", "")
+    flag = f"--xla_force_host_platform_device_count={n}"
+    kept = " ".join(f for f in have.split()
+                    if not f.startswith("--xla_force_host_platform"
+                                        "_device_count"))
+    os.environ["XLA_FLAGS"] = (kept + " " + flag).strip()
+
+
+def set_debug_nan(flag: bool = True) -> None:
+    """Raise on NaN production (debugging aid; costs a device sync per
+    op — never leave it on in a benchmark run)."""
+    jax.config.update("jax_debug_nans", flag)

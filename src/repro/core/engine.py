@@ -55,7 +55,7 @@ from .plan import resolve_interpret  # canonical home is core.plan
 from .segment import SegmentConfig
 from .stencil import StencilPipeline, StencilSpec
 
-Backend = Literal["ref", "pallas"]
+Backend = Literal["ref", "pallas", "triton"]
 
 
 class CasperEngine:
@@ -70,13 +70,14 @@ class CasperEngine:
     ):
         if sweeps < 1:
             raise ValueError(f"sweeps must be >= 1, got {sweeps}")
-        if backend not in ("ref", "pallas"):
+        if backend not in ("ref",) + _plan.KERNEL_BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
         self.spec = spec
         self.backend = backend
         self.segment = segment or SegmentConfig()
-        # None -> auto-detect: interpret Pallas on CPU, compile on TPU.
-        self.interpret = resolve_interpret(interpret)
+        # None -> auto-detect: interpret kernels on CPU, compile on
+        # real hardware (backend-aware: triton wants a GPU).
+        self.interpret = resolve_interpret(interpret, backend)
         self.sweeps = sweeps
         self.tile = tile
         # Pipelines assemble to a PipelineProgram (one Program per stage).

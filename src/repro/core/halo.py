@@ -167,19 +167,21 @@ def _local_multisweep(plan: "_plan.ExecutionPlan", x: jax.Array) -> jax.Array:
         # the per-dim stage sum), so every stage of every sweep computes
         # from exchanged data — one collective launch pair per sharded
         # axis per sweeps*n_stages stage applications.
-        if plan.backend == "pallas":
+        if plan.backend in _plan.KERNEL_BACKENDS:
             from repro.kernels import engine as keng  # lazy: optional dep
             return keng.pipeline_window_sweep(
                 spec, padded, x.shape, origin, grid_shape,
-                tile=plan.tile, sweeps=plan.sweeps, interpret=plan.interpret)
+                tile=plan.tile, sweeps=plan.sweeps, interpret=plan.interpret,
+                lowering="triton" if plan.backend == "triton" else None)
         return _ref.masked_window_pipeline(
             padded, spec.stages, x.shape, plan.sweeps, origin, grid_shape,
             x.dtype).astype(x.dtype)
-    if plan.backend == "pallas":
+    if plan.backend in _plan.KERNEL_BACKENDS:
         from repro.kernels import engine as keng  # lazy: optional dep
         return keng.stencil_window_sweep(
             spec, padded, x.shape, origin, grid_shape,
-            tile=plan.tile, sweeps=plan.sweeps, interpret=plan.interpret)
+            tile=plan.tile, sweeps=plan.sweeps, interpret=plan.interpret,
+            lowering="triton" if plan.backend == "triton" else None)
     return _ref.masked_window_sweeps(
         padded, spec.taps, halo, x.shape, plan.sweeps, origin, grid_shape,
         x.dtype, mode=mode, value=value,
@@ -198,7 +200,7 @@ def execute_plan(plan: "_plan.ExecutionPlan", x: jax.Array) -> jax.Array:
     # purely per-shard, so disabling the check is sound there.
     step = shard_map(local, mesh=plan.mesh, in_specs=(pspec,),
                      out_specs=pspec,
-                     check_rep=(plan.backend != "pallas"))
+                     check_rep=(plan.backend not in _plan.KERNEL_BACKENDS))
     return step(x)
 
 
@@ -209,7 +211,7 @@ def distributed_stencil_fn(
     iters: int = 1,
     *,
     sweeps: int = 1,
-    backend: Literal["ref", "pallas"] = "ref",
+    backend: Literal["ref", "pallas", "triton"] = "ref",
     tile: Sequence[int] | Literal["auto"] | None = None,
     interpret: bool | None = None,
 ) -> Callable[[jax.Array], jax.Array]:
@@ -245,7 +247,7 @@ def distributed_stencil_fn(
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
     if iters < 0:
         raise ValueError(f"iters must be >= 0, got {iters}")
-    if backend not in ("ref", "pallas"):
+    if backend not in ("ref",) + _plan.KERNEL_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
     pspec = P(*grid_axes)
     axes = tuple(grid_axes)

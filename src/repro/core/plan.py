@@ -61,14 +61,22 @@ from .isa import assemble, assemble_pipeline
 from .stencil import (Factorization, StencilPipeline, StencilSpec, as_stages,
                       factor_taps)
 
-Backend = Literal["ref", "pallas", "vm"]
+Backend = Literal["ref", "pallas", "vm", "triton"]
 
 #: The execution layers a plan can target.  ``"ref"`` is the jnp oracle
 #: chain (the numpy oracle shares its pinned order), ``"pallas"`` the
-#: fused TPU kernel, ``"vm"`` the software SPU.  A plan with a mesh
-#: fingerprint executes through the distributed halo path with
-#: shard-local ``ref``/``pallas`` compute.
-BACKENDS = ("ref", "pallas", "vm")
+#: fused TPU (mosaic) kernel, ``"triton"`` the same fused kernels under
+#: the pallas *triton* GPU lowering (interpret mode on CPU hosts — the
+#: whole correctness matrix runs in CI), ``"vm"`` the software SPU.  A
+#: plan with a mesh fingerprint executes through the distributed halo
+#: path with shard-local ``ref``/``pallas``/``triton`` compute.
+BACKENDS = ("ref", "pallas", "vm", "triton")
+
+#: The backends that lower to fused pallas kernels (and therefore carry
+#: a resolved tile, a ghost strategy chosen by :func:`ghost_strategy_for`
+#: and a VMEM/shared-memory feasibility bound).  Everything tile-shaped
+#: branches on this tuple, not on ``== "pallas"``.
+KERNEL_BACKENDS = ("pallas", "triton")
 
 #: Boundary-ghost strategies a plan can select (the *decision* lives
 #: here; the mechanics stay with their backend):
@@ -114,27 +122,63 @@ DEFAULT_TILES: dict[int, tuple[int, ...]] = {
     3: (4, 16, 128),
 }
 
+# GPU (triton) defaults: one CTA per tile, innermost dim warp-aligned
+# (multiples of 32 coalesce; no 8x128 sublane constraint), sized so the
+# fused working set sits comfortably inside one SM's shared memory while
+# still launching enough CTAs to occupy the SMs — the cost-model terms
+# of ``perfmodel.triton_tile_cost``.  ``repro.kernels.gpu`` re-exports
+# this as its default.
+DEFAULT_GPU_TILES: dict[int, tuple[int, ...]] = {
+    1: (1024,),
+    2: (32, 64),
+    3: (4, 8, 64),
+}
 
-def default_tile(ndim: int) -> tuple[int, ...]:
+
+def default_tile(ndim: int, backend: str = "pallas") -> tuple[int, ...]:
+    if backend == "triton":
+        return DEFAULT_GPU_TILES[ndim]
     return DEFAULT_TILES[ndim]
 
 
-def resolve_interpret(interpret: bool | None) -> bool:
-    """``None`` → auto-detect: interpret mode exactly when the default
-    backend is CPU (Pallas TPU kernels need real hardware; CPU needs the
-    interpreter).  An explicit bool is passed through.  This is the one
-    encoding of the policy — ``repro.core.engine`` and
-    ``repro.kernels.engine`` re-export it."""
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
+def resolve_interpret(interpret: bool | None,
+                      backend: str = "pallas") -> bool:
+    """``None`` → backend-aware auto-detect; an explicit bool passes
+    through.  This is the one encoding of the policy —
+    ``repro.core.engine`` and ``repro.kernels.engine`` re-export it.
+
+    * Any kernel backend on a **CPU** host resolves to interpret mode
+      (pallas kernels need real hardware; CPU runs the interpreter).
+    * ``backend="triton"`` compiles only where a GPU exists: on a
+      **GPU** host it resolves to compiled mode, and on a **TPU** host
+      it raises a clear lowering-time error (the triton lowering cannot
+      target TPUs — asking pallas to try would surface as an opaque
+      mosaic traceback deep inside the first kernel call).
+    * ``backend="pallas"`` keeps the original rule: interpret exactly
+      when the default jax backend is CPU.
+    """
+    if interpret is not None:
+        return interpret
+    host = jax.default_backend()
+    if host == "cpu":
+        return True
+    if backend == "triton" and host != "gpu":
+        raise ValueError(
+            f"backend='triton' cannot lower on a {host!r} host: the "
+            "pallas triton path targets GPUs only. Run on a GPU host, "
+            "or pass interpret=True to run the kernels in interpret "
+            "mode (what CI does on CPU).")
+    return False
 
 
 def normalize_tile(spec: StencilSpec,
-                   tile: Sequence[int] | int | None) -> tuple[int, ...]:
-    """Default / int-promote / validate a tile for ``spec``."""
+                   tile: Sequence[int] | int | None,
+                   backend: str = "pallas") -> tuple[int, ...]:
+    """Default / int-promote / validate a tile for ``spec``; the default
+    table is backend-shaped (lane-aligned TPU tiles vs warp-aligned GPU
+    tiles)."""
     if tile is None:
-        tile = DEFAULT_TILES[spec.ndim]
+        tile = default_tile(spec.ndim, backend)
     elif isinstance(tile, int):
         tile = (tile,)
     tile = tuple(int(t) for t in tile)
@@ -165,18 +209,21 @@ def exchange_strategy_for(mode: str) -> str:
 def ghost_strategy_for(spec: StencilSpec, shape: Sequence[int],
                        itemsize: int, sweeps: int,
                        tile: Sequence[int] | int | None,
-                       *, periodic_budget_bytes: int | None = None) -> str:
-    """Pad-free vs padded-window decision for the single-device Pallas
-    backend — previously an ad-hoc branch inside ``kernels.engine``.
+                       *, periodic_budget_bytes: int | None = None,
+                       backend: str = "pallas") -> str:
+    """Pad-free vs padded-window decision for the single-device kernel
+    backends — previously an ad-hoc branch inside ``kernels.engine``.
 
     The pad-free kernel's clamped fetch needs ``window <= grid`` per dim
     (tiny grids fall back), and its periodic wrap gather blocks the
     *whole* grid (the far edge must be addressable), which is only sane
-    while the grid sits comfortably inside VMEM next to the working set
-    (``periodic_budget_bytes``; the caller passes its configured budget —
-    ``kernels.engine._PERIODIC_WHOLE_GRID_BYTES`` by default).  Both
-    fallbacks produce bitwise-identical results through the padded
-    window path.
+    while the grid sits comfortably next to the working set — inside
+    VMEM on the TPU path, inside L2 on the GPU path
+    (``periodic_budget_bytes``; when omitted the backend's configured
+    budget is consulted: ``kernels.engine._PERIODIC_WHOLE_GRID_BYTES``
+    for ``"pallas"``, ``kernels.gpu._PERIODIC_WHOLE_GRID_BYTES`` for
+    ``"triton"``).  Both fallbacks produce bitwise-identical results
+    through the padded window path.
 
     Also accepts a fusable :class:`~repro.core.stencil.StencilPipeline`:
     its ``halo`` is the per-dim sum of stage radii and its
@@ -185,14 +232,18 @@ def ghost_strategy_for(spec: StencilSpec, shape: Sequence[int],
     applies verbatim to the chain's widened window.
     """
     import math
-    tile = normalize_tile(spec, tile)
+    tile = normalize_tile(spec, tile, backend)
     shape = tuple(shape)
     wide = tuple(sweeps * h for h in spec.halo)
     win = tuple(t + 2 * w for t, w in zip(tile, wide))
     if spec.boundary_mode == "periodic":
         if periodic_budget_bytes is None:
-            from repro.kernels import engine as _keng  # lazy: optional dep
-            periodic_budget_bytes = _keng._PERIODIC_WHOLE_GRID_BYTES
+            if backend == "triton":
+                from repro.kernels import gpu as _kgpu  # lazy: optional dep
+                periodic_budget_bytes = _kgpu._PERIODIC_WHOLE_GRID_BYTES
+            else:
+                from repro.kernels import engine as _keng  # lazy: optional
+                periodic_budget_bytes = _keng._PERIODIC_WHOLE_GRID_BYTES
         grid_bytes = math.prod(shape) * itemsize
         return ("padded-window" if grid_bytes > periodic_budget_bytes
                 else "pad-free")
@@ -217,7 +268,7 @@ class ExecutionPlan:
     spec: StencilSpec | StencilPipeline
     shape: tuple[int, ...]              # global grid shape
     dtype: str                          # canonical dtype name
-    backend: str                        # "ref" | "pallas" | "vm"
+    backend: str                        # one of BACKENDS
     sweeps: int
     interpret: bool                     # resolved (pallas interpret mode)
     tile: tuple[int, ...] | None        # resolved output tile (pallas only)
@@ -482,7 +533,7 @@ def lower(spec: StencilSpec, shape: Sequence[int], dtype, *,
         raise ValueError("mesh and grid_axes must be passed together")
     if grid_axes is not None and len(grid_axes) != spec.ndim:
         raise ValueError("grid_axes must have one entry per grid dim")
-    interp = resolve_interpret(interpret)
+    interp = resolve_interpret(interpret, backend)
     tile_req = canonical_tile_request(tile)
     axes = tuple(grid_axes) if grid_axes is not None else None
 
@@ -557,7 +608,7 @@ def _lower_pipeline_uncached(pipe, shape, dtype, backend, sweeps, tile_req,
                 for d in range(pipe.ndim))
 
     slab_budget = slabs = slab_overlap = None
-    if mesh is None and backend in ("ref", "pallas"):
+    if mesh is None and backend in ("ref",) + KERNEL_BACKENDS:
         if fused:
             slab_budget, slabs, slab_overlap = _slab_decomposition(
                 shape, deep, dtype.itemsize)
@@ -570,7 +621,7 @@ def _lower_pipeline_uncached(pipe, shape, dtype, backend, sweeps, tile_req,
     ghost = "pad" if fused else "staged"
     if not fused:
         pass                                # stage plans decide everything
-    elif backend == "pallas":
+    elif backend in KERNEL_BACKENDS:
         tune_shape = shard_shape if shard_shape is not None else shape
         if slabs is not None:               # tune for the slab, not the grid
             tune_shape = (slabs[0][1] - slabs[0][0],) + shape[1:]
@@ -579,16 +630,16 @@ def _lower_pipeline_uncached(pipe, shape, dtype, backend, sweeps, tile_req,
             PLAN_CACHE.autotune_calls += 1
             resolved_tile = tune.autotune_pipeline(
                 pipe, tune_shape, sweeps=sweeps,
-                itemsize=dtype.itemsize).tile
+                itemsize=dtype.itemsize, backend=backend).tile
         else:
-            resolved_tile = normalize_tile(pipe, tile_req)
+            resolved_tile = normalize_tile(pipe, tile_req, backend)
         if mesh is not None:
             ghost = "padded-window"
         elif slabs is not None:
             ghost = "stream-from-host"
         else:
             ghost = ghost_strategy_for(pipe, shape, dtype.itemsize, sweeps,
-                                       resolved_tile)
+                                       resolved_tile, backend=backend)
     elif backend == "vm":
         ghost = "stream"
     elif slabs is not None:                 # fused ref chain, over budget
@@ -625,13 +676,13 @@ def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
             for d in range(spec.ndim))
 
     slab_budget = slabs = slab_overlap = None
-    if mesh is None and backend in ("ref", "pallas"):
+    if mesh is None and backend in ("ref",) + KERNEL_BACKENDS:
         slab_budget, slabs, slab_overlap = _slab_decomposition(
             shape, deep, dtype.itemsize)
 
     resolved_tile = None
     ghost = "pad"                               # oracle default
-    if backend == "pallas":
+    if backend in KERNEL_BACKENDS:
         tune_shape = shard_shape if shard_shape is not None else shape
         if slabs is not None:                   # tune for the slab window
             tune_shape = (slabs[0][1] - slabs[0][0],) + shape[1:]
@@ -639,9 +690,10 @@ def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
             from repro.kernels import tune      # lazy: optional dep
             PLAN_CACHE.autotune_calls += 1
             resolved_tile = tune.autotune(spec, tune_shape, sweeps=sweeps,
-                                          itemsize=dtype.itemsize).tile
+                                          itemsize=dtype.itemsize,
+                                          backend=backend).tile
         else:
-            resolved_tile = normalize_tile(spec, tile_req)
+            resolved_tile = normalize_tile(spec, tile_req, backend)
         if mesh is not None:
             # the shard-local kernel always runs on the exchanged
             # (already ghost-extended) window
@@ -650,7 +702,7 @@ def _lower_uncached(spec, shape, dtype, backend, sweeps, tile_req, mesh,
             ghost = "stream-from-host"
         else:
             ghost = ghost_strategy_for(spec, shape, dtype.itemsize, sweeps,
-                                       resolved_tile)
+                                       resolved_tile, backend=backend)
     elif backend == "vm":
         ghost = "stream"
     elif slabs is not None:                     # ref oracle, over budget
@@ -695,6 +747,9 @@ def execute(plan: ExecutionPlan, grid):
     if plan.backend == "pallas":
         from repro.kernels import engine as _keng   # lazy: optional dep
         return _keng.execute_plan(plan, grid)
+    if plan.backend == "triton":
+        from repro.kernels import gpu as _kgpu      # lazy: optional dep
+        return _kgpu.execute_plan(plan, grid)
     if plan.backend == "vm":
         from . import vm as _vm
         return _vm.execute_plan(plan, grid)[0]
@@ -745,7 +800,7 @@ def _may_stream(spec, shape, dtype, backend: str) -> bool:
     for these inputs?  Lets the runners keep the common (fitting) path
     free of eager plan-cache traffic — they only lower outside the jit
     when the grid actually exceeds the configured budget."""
-    return (backend in ("ref", "pallas")
+    return (backend in ("ref",) + KERNEL_BACKENDS
             and math.prod(shape) * jnp.dtype(dtype).itemsize
             > _pm.slab_budget_bytes())
 
@@ -871,7 +926,7 @@ def batch_handle(spec: StencilSpec | StencilPipeline, backend: str,
     :func:`batch_runner` cache entry)."""
     return BatchHandle(spec, backend, sweeps,
                        canonical_tile_request(tile_req),
-                       resolve_interpret(interpret))
+                       resolve_interpret(interpret, backend))
 
 
 def runner_cache_stats() -> dict:

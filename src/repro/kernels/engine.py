@@ -117,6 +117,37 @@ def _acc_dtype(dtype) -> jnp.dtype:
     return jnp.dtype(dtype)
 
 
+def _lowering_backend(lowering: str | None) -> str:
+    """Map a pallas ``lowering`` request to its plan backend name."""
+    return "triton" if lowering == "triton" else "pallas"
+
+
+def _call_kwargs(lowering: str | None, interpret: bool,
+                 tile: Sequence[int]) -> dict:
+    """Extra ``pallas_call`` kwargs selecting a non-default lowering.
+
+    ``lowering="triton"`` routes the *same* kernel bodies through the
+    pallas triton (GPU) lowering instead of mosaic — f64 bit-identity
+    with the oracle holds by construction because the traced computation
+    is unchanged.  Interpret mode still tags the call with the triton
+    backend (the pallas interpreter accepts it, so the whole matrix runs
+    on CPU CI); compiled mode additionally attaches
+    ``TritonCompilerParams`` with a warp count scaled to the tile so one
+    CTA's lanes cover the innermost (coalescing) dimension.
+    """
+    if lowering is None:
+        return {}
+    if lowering != "triton":
+        raise ValueError(f"unknown pallas lowering {lowering!r}")
+    kwargs: dict = {"backend": "triton"}
+    if not interpret:
+        from jax.experimental.pallas import triton as _plt
+        num_warps = max(1, min(8, math.prod(tile) // (4 * _pm.WARP_LANES)))
+        kwargs["compiler_params"] = _plt.TritonCompilerParams(
+            num_warps=num_warps, num_stages=2)
+    return kwargs
+
+
 def _kernel(x_ref, org_ref, o_ref, *, taps, halo, tile, sweeps, grid_shape,
             acc_dtype, mode, value, structure):
     """Apply ``sweeps`` fused stencil applications to one resident window.
@@ -217,7 +248,8 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
                          grid_shape: Sequence[int],
                          tile: Sequence[int] | int | None = None,
                          sweeps: int = 1,
-                         interpret: bool | None = None) -> jax.Array:
+                         interpret: bool | None = None,
+                         lowering: str | None = None) -> jax.Array:
     """``sweeps`` fused applications to a block that already carries its
     ``sweeps*halo``-wide halo.
 
@@ -233,8 +265,8 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
     """
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
-    interpret = resolve_interpret(interpret)
-    tile = _normalize_tile(spec, tile)
+    interpret = resolve_interpret(interpret, _lowering_backend(lowering))
+    tile = _normalize_tile(spec, tile, _lowering_backend(lowering))
     halo = spec.halo
     out_shape = tuple(out_shape)
     grid_shape = tuple(int(n) for n in grid_shape)
@@ -269,6 +301,7 @@ def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
         out_specs=pl.BlockSpec(tile, lambda *ids: ids),
         out_shape=jax.ShapeDtypeStruct(padded, window.dtype),
         interpret=interpret,
+        **_call_kwargs(lowering, interpret, tile),
     )(xp, org)
     return out[tuple(slice(0, n) for n in out_shape)]
 
@@ -277,7 +310,8 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
                   tile: Sequence[int] | int | None = None,
                   sweeps: int = 1,
                   interpret: bool | None = None,
-                  strategy: str | None = None) -> jax.Array:
+                  strategy: str | None = None,
+                  lowering: str | None = None) -> jax.Array:
     """``sweeps`` fused applications of ``spec`` to ``grid`` under the
     spec's boundary mode, **pad-free**: the kernel fetches its window
     straight from the unpadded grid and materializes boundary ghosts
@@ -298,8 +332,8 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
         raise ValueError(f"grid rank {grid.ndim} != spec ndim {spec.ndim}")
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
-    interpret = resolve_interpret(interpret)
-    tile = _normalize_tile(spec, tile)
+    interpret = resolve_interpret(interpret, _lowering_backend(lowering))
+    tile = _normalize_tile(spec, tile, _lowering_backend(lowering))
     halo = spec.halo
     wide = tuple(sweeps * h for h in halo)
     win = tuple(t + 2 * w for t, w in zip(tile, wide))
@@ -307,11 +341,18 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
     # The pad-free vs padded-window choice is a lowering decision:
     # execute_plan passes the plan's recorded strategy; direct callers
     # (no plan in hand) ask core.plan for the answer here (the budget
-    # knob stays a module attribute so it can be patched per test).
+    # knob stays a module attribute so it can be patched per test; the
+    # triton lowering's knob lives in repro.kernels.gpu and is resolved
+    # by ghost_strategy_for itself).
     if strategy is None:
-        strategy = _plan.ghost_strategy_for(
-            spec, grid.shape, grid.dtype.itemsize, sweeps, tile,
-            periodic_budget_bytes=_PERIODIC_WHOLE_GRID_BYTES)
+        if lowering == "triton":
+            strategy = _plan.ghost_strategy_for(
+                spec, grid.shape, grid.dtype.itemsize, sweeps, tile,
+                backend="triton")
+        else:
+            strategy = _plan.ghost_strategy_for(
+                spec, grid.shape, grid.dtype.itemsize, sweeps, tile,
+                periodic_budget_bytes=_PERIODIC_WHOLE_GRID_BYTES)
     if strategy == "padded-window":
         # Padded fallback: the clamped fetch needs win <= N per dim
         # (tiny grids), and the periodic wrap gather needs the whole
@@ -323,7 +364,8 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
                                    spec.boundary_value)
         return stencil_window_sweep(
             spec, window, grid.shape, (0,) * spec.ndim, grid.shape,
-            tile=tile, sweeps=sweeps, interpret=interpret)
+            tile=tile, sweeps=sweeps, interpret=interpret,
+            lowering=lowering)
 
     grid_dims = tuple(-(-n // t) for n, t in zip(grid.shape, tile))
     padded = tuple(d * t for d, t in zip(grid_dims, tile))
@@ -352,6 +394,7 @@ def stencil_sweep(spec: StencilSpec, grid: jax.Array,
         out_specs=pl.BlockSpec(tile, lambda *ids: ids),
         out_shape=jax.ShapeDtypeStruct(padded, grid.dtype),
         interpret=interpret,
+        **_call_kwargs(lowering, interpret, tile),
     )(grid)
     if padded == n_shape:
         return out
@@ -362,20 +405,23 @@ def stencil_apply(spec: StencilSpec, grid: jax.Array,
                   tile: Sequence[int] | int | None = None,
                   sweeps: int = 1,
                   interpret: bool | None = None,
-                  strategy: str | None = None) -> jax.Array:
+                  strategy: str | None = None,
+                  lowering: str | None = None) -> jax.Array:
     """Rank-dispatching entry point with an optional leading batch dim.
 
     ``grid.ndim == spec.ndim``    → one grid;
     ``grid.ndim == spec.ndim+1``  → dim 0 is a batch of independent
     grids, mapped with ``jax.vmap`` over one shared kernel.
     """
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, _lowering_backend(lowering))
     if grid.ndim == spec.ndim:
         return stencil_sweep(spec, grid, tile=tile, sweeps=sweeps,
-                             interpret=interpret, strategy=strategy)
+                             interpret=interpret, strategy=strategy,
+                             lowering=lowering)
     if grid.ndim == spec.ndim + 1:
         fn = functools.partial(stencil_sweep, spec, tile=tile, sweeps=sweeps,
-                               interpret=interpret, strategy=strategy)
+                               interpret=interpret, strategy=strategy,
+                               lowering=lowering)
         return jax.vmap(fn)(grid)
     raise ValueError(
         f"grid rank {grid.ndim} incompatible with spec ndim {spec.ndim} "
@@ -426,7 +472,8 @@ def pipeline_window_sweep(pipeline: StencilPipeline, window: jax.Array,
                           grid_shape: Sequence[int],
                           tile: Sequence[int] | int | None = None,
                           sweeps: int = 1,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          lowering: str | None = None) -> jax.Array:
     """``sweeps`` fused chain applications to a block that already
     carries its ``sweeps * H`` halo (``H`` = summed stage radii) filled
     with stage 0's boundary extension — the pipeline analogue of
@@ -438,8 +485,8 @@ def pipeline_window_sweep(pipeline: StencilPipeline, window: jax.Array,
         raise ValueError(
             f"{pipeline.name}: mixed periodic/non-periodic stages cannot "
             "run fused; lower the pipeline and use the staged plan")
-    interpret = resolve_interpret(interpret)
-    tile = _normalize_tile(pipeline, tile)
+    interpret = resolve_interpret(interpret, _lowering_backend(lowering))
+    tile = _normalize_tile(pipeline, tile, _lowering_backend(lowering))
     out_shape = tuple(out_shape)
     grid_shape = tuple(int(n) for n in grid_shape)
     wide = tuple(sweeps * h for h in pipeline.halo)
@@ -471,6 +518,7 @@ def pipeline_window_sweep(pipeline: StencilPipeline, window: jax.Array,
         out_specs=pl.BlockSpec(tile, lambda *ids: ids),
         out_shape=jax.ShapeDtypeStruct(padded, window.dtype),
         interpret=interpret,
+        **_call_kwargs(lowering, interpret, tile),
     )(xp, org)
     return out[tuple(slice(0, n) for n in out_shape)]
 
@@ -479,7 +527,8 @@ def pipeline_sweep(pipeline: StencilPipeline, grid: jax.Array,
                    tile: Sequence[int] | int | None = None,
                    sweeps: int = 1,
                    interpret: bool | None = None,
-                   strategy: str | None = None) -> jax.Array:
+                   strategy: str | None = None,
+                   lowering: str | None = None) -> jax.Array:
     """``sweeps`` fused applications of a stage chain: one HBM read of
     the ``sweeps * H``-widened window and one write per tile — every
     intermediate stage field stays in VMEM, never round-tripping HBM.
@@ -498,20 +547,25 @@ def pipeline_sweep(pipeline: StencilPipeline, grid: jax.Array,
             f"grid rank {grid.ndim} != pipeline ndim {pipeline.ndim}")
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
-    interpret = resolve_interpret(interpret)
-    tile = _normalize_tile(pipeline, tile)
+    interpret = resolve_interpret(interpret, _lowering_backend(lowering))
+    tile = _normalize_tile(pipeline, tile, _lowering_backend(lowering))
     if strategy is None:
-        strategy = ("staged" if not pipeline.fusable
-                    else _plan.ghost_strategy_for(
-                        pipeline, grid.shape, grid.dtype.itemsize, sweeps,
-                        tile,
-                        periodic_budget_bytes=_PERIODIC_WHOLE_GRID_BYTES))
+        if not pipeline.fusable:
+            strategy = "staged"
+        elif lowering == "triton":
+            strategy = _plan.ghost_strategy_for(
+                pipeline, grid.shape, grid.dtype.itemsize, sweeps, tile,
+                backend="triton")
+        else:
+            strategy = _plan.ghost_strategy_for(
+                pipeline, grid.shape, grid.dtype.itemsize, sweeps, tile,
+                periodic_budget_bytes=_PERIODIC_WHOLE_GRID_BYTES)
     if strategy == "staged":
         out = grid
         for _ in range(sweeps):
             for stage in pipeline.stages:
                 out = stencil_sweep(stage, out, tile=tile, sweeps=1,
-                                    interpret=interpret)
+                                    interpret=interpret, lowering=lowering)
         return out
     if not pipeline.fusable:
         raise ValueError(
@@ -526,7 +580,8 @@ def pipeline_sweep(pipeline: StencilPipeline, grid: jax.Array,
                                    pipeline.boundary_value)
         return pipeline_window_sweep(
             pipeline, window, grid.shape, (0,) * pipeline.ndim, grid.shape,
-            tile=tile, sweeps=sweeps, interpret=interpret)
+            tile=tile, sweeps=sweeps, interpret=interpret,
+            lowering=lowering)
 
     grid_dims = tuple(-(-n // t) for n, t in zip(grid.shape, tile))
     padded = tuple(d * t for d, t in zip(grid_dims, tile))
@@ -555,6 +610,7 @@ def pipeline_sweep(pipeline: StencilPipeline, grid: jax.Array,
         out_specs=pl.BlockSpec(tile, lambda *ids: ids),
         out_shape=jax.ShapeDtypeStruct(padded, grid.dtype),
         interpret=interpret,
+        **_call_kwargs(lowering, interpret, tile),
     )(grid)
     if padded == n_shape:
         return out
@@ -565,17 +621,19 @@ def pipeline_apply(pipeline: StencilPipeline, grid: jax.Array,
                    tile: Sequence[int] | int | None = None,
                    sweeps: int = 1,
                    interpret: bool | None = None,
-                   strategy: str | None = None) -> jax.Array:
+                   strategy: str | None = None,
+                   lowering: str | None = None) -> jax.Array:
     """Pipeline analogue of :func:`stencil_apply`: one grid, or a
     leading batch dim vmapped over one shared fused-chain kernel."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, _lowering_backend(lowering))
     if grid.ndim == pipeline.ndim:
         return pipeline_sweep(pipeline, grid, tile=tile, sweeps=sweeps,
-                              interpret=interpret, strategy=strategy)
+                              interpret=interpret, strategy=strategy,
+                              lowering=lowering)
     if grid.ndim == pipeline.ndim + 1:
         fn = functools.partial(pipeline_sweep, pipeline, tile=tile,
                                sweeps=sweeps, interpret=interpret,
-                               strategy=strategy)
+                               strategy=strategy, lowering=lowering)
         return jax.vmap(fn)(grid)
     raise ValueError(
         f"grid rank {grid.ndim} incompatible with pipeline ndim "

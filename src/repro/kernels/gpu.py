@@ -1,0 +1,192 @@
+"""GPU (pallas triton) lowering of the fused stencil engine.
+
+``backend="triton"`` routes the *same* generic kernel bodies as the TPU
+path (:mod:`repro.kernels.engine`) through the pallas **triton**
+lowering — this module is deliberately thin: every entry point resolves
+GPU-shaped defaults (warp-aligned tiles, the L2-derived periodic
+whole-grid budget, backend-aware interpret detection) and then delegates
+to the engine with ``lowering="triton"``.  Because the traced
+computation is byte-for-byte the kernel the TPU path traces, f64 results
+are bit-identical to the ``core.ref`` oracle *by construction* — the
+correctness matrix in ``tests/`` pins it anyway.
+
+What changes on GPU is the *shape* of a good tile, not the kernel:
+
+* one tile = one **CTA**; the innermost dimension wants multiples of the
+  32-lane warp for coalesced loads (there is no 8×128 sublane/lane
+  constraint — see ``plan.DEFAULT_GPU_TILES``);
+* the fused working set must fit one SM's **shared memory**
+  (~96 KiB on the modeled part) instead of 16 MiB of VMEM, so tiles are
+  much smaller and temporal blocking shallower;
+* tiles must be numerous enough to occupy ~80 SMs — the
+  occupancy-vs-per-CTA-overhead trade the GPU cost model
+  (:func:`repro.core.perfmodel.triton_tile_cost`) ranks candidates by;
+* the periodic pad-free wrap gather blocks the whole grid, which on GPU
+  streams through **L2** rather than sitting in a per-core scratchpad —
+  the budget below is L2-derived and deliberately tighter than the TPU
+  knob.
+
+On a CPU-only host every call resolves to interpret mode (the whole
+rank × boundary × structure × sweeps matrix runs in CI); on a GPU host
+pallas compiles through triton with ``TritonCompilerParams``; a TPU
+host raises a clear lowering error (see
+:func:`repro.core.plan.resolve_interpret`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+
+from repro.core import perfmodel as _pm
+from repro.core import plan as _plan
+from repro.core.stencil import StencilPipeline, StencilSpec
+from repro.kernels import engine as _engine
+
+# Tile defaulting is a lowering decision and lives in repro.core.plan;
+# re-exported here for symmetry with kernels.engine.
+DEFAULT_GPU_TILES = _plan.DEFAULT_GPU_TILES
+
+# Periodic pad-free budget: the wrap gather's block is the whole grid,
+# which on GPU has no VMEM to sit in — it streams through L2, so the
+# whole-grid block only beats window-sized fetches from a wrap-padded
+# copy while the grid occupies a modest slice of L2.  Same patchable-
+# knob contract as ``engine._PERIODIC_WHOLE_GRID_BYTES`` (read at call
+# time via ``plan.ghost_strategy_for``); the canonical default lives in
+# perfmodel next to the GPU cost-model constants.
+_PERIODIC_WHOLE_GRID_BYTES = _pm.GPU_PERIODIC_WHOLE_GRID_BYTES
+
+
+def _default(tile, ndim: int):
+    """GPU tile defaulting for direct callers (plans arrive resolved)."""
+    return DEFAULT_GPU_TILES[ndim] if tile is None else tile
+
+
+def stencil_window_sweep(spec: StencilSpec, window: jax.Array,
+                         out_shape: Sequence[int], origin,
+                         grid_shape: Sequence[int],
+                         tile: Sequence[int] | int | None = None,
+                         sweeps: int = 1,
+                         interpret: bool | None = None) -> jax.Array:
+    """Triton lowering of :func:`repro.kernels.engine.stencil_window_sweep`
+    (the shard-local deep-halo entry point)."""
+    return _engine.stencil_window_sweep(
+        spec, window, out_shape, origin, grid_shape,
+        tile=_default(tile, spec.ndim), sweeps=sweeps,
+        interpret=interpret, lowering="triton")
+
+
+def stencil_sweep(spec: StencilSpec, grid: jax.Array,
+                  tile: Sequence[int] | int | None = None,
+                  sweeps: int = 1,
+                  interpret: bool | None = None,
+                  strategy: str | None = None) -> jax.Array:
+    """``sweeps`` fused applications under the triton lowering; GPU tile
+    defaults and the L2-derived periodic budget, otherwise the engine's
+    pad-free machinery verbatim."""
+    if strategy is None:
+        strategy = _plan.ghost_strategy_for(
+            spec, grid.shape, grid.dtype.itemsize, sweeps,
+            _default(tile, spec.ndim),
+            periodic_budget_bytes=_PERIODIC_WHOLE_GRID_BYTES)
+    return _engine.stencil_sweep(
+        spec, grid, tile=_default(tile, spec.ndim), sweeps=sweeps,
+        interpret=interpret, strategy=strategy, lowering="triton")
+
+
+def stencil_apply(spec: StencilSpec, grid: jax.Array,
+                  tile: Sequence[int] | int | None = None,
+                  sweeps: int = 1,
+                  interpret: bool | None = None,
+                  strategy: str | None = None) -> jax.Array:
+    """Rank-dispatching triton entry point (leading batch dim vmapped),
+    mirroring :func:`repro.kernels.engine.stencil_apply`."""
+    interpret = _plan.resolve_interpret(interpret, "triton")
+    if grid.ndim == spec.ndim:
+        return stencil_sweep(spec, grid, tile=tile, sweeps=sweeps,
+                             interpret=interpret, strategy=strategy)
+    if grid.ndim == spec.ndim + 1:
+        fn = functools.partial(stencil_sweep, spec, tile=tile,
+                               sweeps=sweeps, interpret=interpret,
+                               strategy=strategy)
+        return jax.vmap(fn)(grid)
+    raise ValueError(
+        f"grid rank {grid.ndim} incompatible with spec ndim {spec.ndim} "
+        f"(expected ndim or ndim+1 for a batched grid)")
+
+
+def pipeline_window_sweep(pipeline: StencilPipeline, window: jax.Array,
+                          out_shape: Sequence[int], origin,
+                          grid_shape: Sequence[int],
+                          tile: Sequence[int] | int | None = None,
+                          sweeps: int = 1,
+                          interpret: bool | None = None) -> jax.Array:
+    """Triton lowering of the fused-chain deep-halo entry point."""
+    return _engine.pipeline_window_sweep(
+        pipeline, window, out_shape, origin, grid_shape,
+        tile=_default(tile, pipeline.ndim), sweeps=sweeps,
+        interpret=interpret, lowering="triton")
+
+
+def pipeline_sweep(pipeline: StencilPipeline, grid: jax.Array,
+                   tile: Sequence[int] | int | None = None,
+                   sweeps: int = 1,
+                   interpret: bool | None = None,
+                   strategy: str | None = None) -> jax.Array:
+    """Fused stage-chain sweeps under the triton lowering."""
+    if strategy is None and pipeline.fusable:
+        strategy = _plan.ghost_strategy_for(
+            pipeline, grid.shape, grid.dtype.itemsize, sweeps,
+            _default(tile, pipeline.ndim),
+            periodic_budget_bytes=_PERIODIC_WHOLE_GRID_BYTES)
+    return _engine.pipeline_sweep(
+        pipeline, grid, tile=_default(tile, pipeline.ndim), sweeps=sweeps,
+        interpret=interpret, strategy=strategy, lowering="triton")
+
+
+def pipeline_apply(pipeline: StencilPipeline, grid: jax.Array,
+                   tile: Sequence[int] | int | None = None,
+                   sweeps: int = 1,
+                   interpret: bool | None = None,
+                   strategy: str | None = None) -> jax.Array:
+    """Pipeline analogue of :func:`stencil_apply` for the triton path."""
+    interpret = _plan.resolve_interpret(interpret, "triton")
+    if grid.ndim == pipeline.ndim:
+        return pipeline_sweep(pipeline, grid, tile=tile, sweeps=sweeps,
+                              interpret=interpret, strategy=strategy)
+    if grid.ndim == pipeline.ndim + 1:
+        fn = functools.partial(pipeline_sweep, pipeline, tile=tile,
+                               sweeps=sweeps, interpret=interpret,
+                               strategy=strategy)
+        return jax.vmap(fn)(grid)
+    raise ValueError(
+        f"grid rank {grid.ndim} incompatible with pipeline ndim "
+        f"{pipeline.ndim} (expected ndim or ndim+1 for a batched grid)")
+
+
+def execute_plan(plan, grid: jax.Array) -> jax.Array:
+    """Thin triton executor of one lowered
+    :class:`~repro.core.plan.ExecutionPlan` — the GPU sibling of
+    :func:`repro.kernels.engine.execute_plan`."""
+    if plan.backend != "triton":
+        raise ValueError(f"not a triton plan: backend={plan.backend!r}")
+    if plan.is_pipeline:
+        return pipeline_apply(plan.spec, grid, tile=plan.tile,
+                              sweeps=plan.sweeps, interpret=plan.interpret,
+                              strategy=plan.ghost_strategy)
+    return stencil_apply(plan.spec, grid, tile=plan.tile,
+                         sweeps=plan.sweeps, interpret=plan.interpret,
+                         strategy=plan.ghost_strategy)
+
+
+def run_sweeps(spec: StencilSpec, grid: jax.Array, iters: int,
+               tile: Sequence[int] | int | None = None,
+               sweeps: int = 1,
+               interpret: bool | None = None) -> jax.Array:
+    """``iters`` total applications fused ``sweeps`` at a time through a
+    cached triton plan (the GPU sibling of ``engine.run_sweeps``)."""
+    plan = _plan.lower(spec, _plan._grid_shape_for(spec, grid), grid.dtype,
+                       backend="triton", sweeps=sweeps, tile=tile,
+                       interpret=interpret)
+    return _plan.run_plan(plan, grid, iters)

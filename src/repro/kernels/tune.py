@@ -1,33 +1,50 @@
-"""Tile-shape autotuner for the unified stencil engine.
+"""Tile-shape autotuner for the unified stencil engine (both lowerings).
 
-Ranks candidate output tiles with the first-order TPU cost model in
-:mod:`repro.core.perfmodel` (``pallas_tile_cost``): HBM-traffic vs VPU
-roofline, VMEM-capacity feasibility, lane-alignment padding, and
-per-grid-step sequencing overhead.  The analytic pass is free, so it runs
-for every (spec, shape, sweeps) the engine sees; ``measure=True``
-additionally wall-clocks the top analytic candidates on the real array
-(interpret mode on CPU, compiled on TPU) and re-ranks by measurement.
+Ranks candidate output tiles with the first-order cost models in
+:mod:`repro.core.perfmodel` — ``pallas_tile_cost`` for the TPU (mosaic)
+lowering, ``triton_tile_cost`` for ``backend="triton"``: memory-traffic
+vs compute roofline, scratch-capacity feasibility (VMEM vs SM shared
+memory), alignment padding (128-lane vs 32-lane warp grain), and
+per-step sequencing overhead (grid steps vs CTA launches scaled by
+occupancy).  The analytic pass is free, so it runs for every (spec,
+shape, sweeps, backend) the engine sees; ``measure=True`` additionally
+wall-clocks the top analytic candidates on the real array (interpret
+mode on CPU, compiled on real hardware) and re-ranks by measurement.
 
-The candidate lists keep the innermost dimension a multiple of 128 (VPU
-lane width) and the second-minor a multiple of 8 (f32 sublanes); rank-1
-tiles are lane multiples.  See docs/kernels.md for how to extend them.
+The TPU candidate lists keep the innermost dimension a multiple of 128
+(VPU lane width) and the second-minor a multiple of 8 (f32 sublanes);
+the GPU lists keep the innermost a multiple of the 32-lane warp (the
+coalescing grain — there is no sublane constraint) and stay small
+enough that the fused working set fits one SM's shared memory while
+launching enough CTAs to occupy the device.  See docs/kernels.md.
 
-The spec's boundary mode participates in the ranking (``reflect`` charges
-the between-sweep ghost re-mirroring gather) and so does its tap
-*structure*: the cost model's compute term uses the factored per-point
-flop count (``spec.structured_flops_per_point()``) and its VMEM
-feasibility check charges one live window-sized intermediate per
-factored term, so separable specs (``blur2d``, ``star33_3d``) rank
-tiles by their actual — cheaper — factored compute.  Both enter the
-cache key: ``autotune`` is memoized on the full ``StencilSpec``, which
-includes ``boundary`` and ``structure`` (a forced-dense spec tunes
-separately).
+The spec's boundary mode participates in the ranking (``reflect``
+charges the between-sweep ghost re-mirroring gather) and so does its
+tap *structure*: the compute term uses the factored per-point flop
+count (``spec.structured_flops_per_point()``) and the feasibility check
+charges one live window-sized intermediate per factored term.  All of
+it enters the cache key: ``autotune`` is memoized on the full
+``StencilSpec`` (boundary + structure included), the backend, *and* the
+active measured-calibration fingerprint
+(:func:`repro.core.perfmodel.calibration_fingerprint`) — rankings
+computed under a ``CASPER_CALIBRATION`` override never collide with
+uncalibrated ones.
+
+``autotune_measured`` results can persist across processes: point
+``CASPER_TUNE_CACHE`` at a directory and each measured tune is stored
+as one JSON file keyed (sha256) like the plan cache — full spec, shape,
+dtype, sweeps, backend, measurement config and calibration fingerprint.
+Hit/miss/store counters (:data:`TUNE_DISK_CACHE`) are pinned by tests
+the same way ``plan.PLAN_CACHE``'s are.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import json
 import math
+import os
 import time
 from typing import Sequence
 
@@ -42,18 +59,56 @@ CANDIDATE_TILES: dict[int, tuple[tuple[int, ...], ...]] = {
         (4, 16, 256), (8, 8, 128), (4, 32, 128), (2, 32, 256)),
 }
 
+# GPU (triton) candidates: one CTA per tile.  Innermost dims are warp
+# multiples (32) for coalesced loads; totals run from a few hundred
+# points (deep-sweep f64 working sets must fit ~96 KiB of shared
+# memory) up to a few thousand (small grids should still fill the SMs
+# — triton_tile_cost's occupancy term penalizes too-coarse covers).
+CANDIDATE_GPU_TILES: dict[int, tuple[tuple[int, ...], ...]] = {
+    1: ((128,), (256,), (512,), (1024,), (2048,), (4096,)),
+    2: ((8, 32), (8, 64), (16, 32), (16, 64), (32, 32), (32, 64),
+        (32, 128), (64, 64), (8, 128)),
+    3: ((2, 4, 32), (2, 8, 32), (4, 4, 32), (4, 8, 32), (4, 8, 64),
+        (8, 8, 32), (2, 8, 64), (2, 16, 64), (4, 16, 32)),
+}
+
 
 def candidate_tiles(ndim: int,
-                    shape: Sequence[int] | None = None
+                    shape: Sequence[int] | None = None,
+                    backend: str = "pallas"
                     ) -> tuple[tuple[int, ...], ...]:
-    """Candidates for ``ndim``, dropping tiles absurdly larger than the
-    grid (a tile more than 4x the padded extent wastes every lane)."""
-    cands = CANDIDATE_TILES[ndim]
+    """Candidates for ``ndim`` under ``backend``'s alignment constraints,
+    dropping tiles absurdly larger than the grid (a tile more than 4x
+    the padded extent wastes every lane)."""
+    cands = (CANDIDATE_GPU_TILES if backend == "triton"
+             else CANDIDATE_TILES)[ndim]
     if shape is None:
         return cands
     kept = tuple(t for t in cands
                  if all(td <= 4 * nd for td, nd in zip(t, shape)))
     return kept or cands[:1]
+
+
+def _tile_cost(spec, shape, tile, sweeps, itemsize, backend) -> float:
+    if backend == "triton":
+        return pm.triton_tile_cost(spec, shape, tile, sweeps=sweeps,
+                                   itemsize=itemsize)
+    return pm.pallas_tile_cost(spec, shape, tile, sweeps=sweeps,
+                               itemsize=itemsize)
+
+
+def _pipeline_tile_cost(pipe, shape, tile, sweeps, itemsize,
+                        backend) -> float:
+    if backend == "triton":
+        return pm.triton_pipeline_tile_cost(pipe, shape, tile,
+                                            sweeps=sweeps,
+                                            itemsize=itemsize)
+    return pm.pallas_pipeline_tile_cost(pipe, shape, tile, sweeps=sweeps,
+                                        itemsize=itemsize)
+
+
+def _budget_name(backend: str) -> str:
+    return "GPU shared memory" if backend == "triton" else "VMEM"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,60 +127,163 @@ class TuneResult:
         }
 
 
-@functools.lru_cache(maxsize=512)
 def autotune(spec: StencilSpec, shape: tuple[int, ...], sweeps: int = 1,
-             itemsize: int = 4) -> TuneResult:
-    """Best tile for (spec, shape, sweeps) under the analytic cost model."""
-    shape = tuple(shape)
-    scored = sorted(
-        ((tile, pm.pallas_tile_cost(spec, shape, tile, sweeps=sweeps,
-                                    itemsize=itemsize))
-         for tile in candidate_tiles(spec.ndim, shape)),
-        key=lambda tc: tc[1])
-    best, cost = scored[0]
-    if math.isinf(cost):
-        raise ValueError(
-            f"no candidate tile fits VMEM for {spec.name} sweeps={sweeps}")
-    return TuneResult(best, cost, tuple(scored))
+             itemsize: int = 4, backend: str = "pallas") -> TuneResult:
+    """Best tile for (spec, shape, sweeps) under ``backend``'s analytic
+    cost model.  The memo key includes the live calibration fingerprint
+    so a ``CASPER_CALIBRATION`` change re-ranks instead of serving stale
+    cached rankings."""
+    return _autotune(spec, tuple(shape), sweeps, itemsize, backend,
+                     pm.calibration_fingerprint())
 
 
 @functools.lru_cache(maxsize=512)
-def autotune_pipeline(pipeline, shape: tuple[int, ...], sweeps: int = 1,
-                      itemsize: int = 4) -> TuneResult:
-    """Best tile for a fused :class:`~repro.core.stencil.StencilPipeline`
-    chain: same candidate lists, ranked by
-    :func:`repro.core.perfmodel.pallas_pipeline_tile_cost` (summed-halo
-    window traffic, per-stage structured compute at the exact
-    element-layer schedule).  Memoized on the full pipeline — stage
-    order, per-stage boundary and structure all participate."""
-    shape = tuple(shape)
+def _autotune(spec: StencilSpec, shape: tuple[int, ...], sweeps: int,
+              itemsize: int, backend: str, _cal) -> TuneResult:
     scored = sorted(
-        ((tile, pm.pallas_pipeline_tile_cost(pipeline, shape, tile,
-                                             sweeps=sweeps,
-                                             itemsize=itemsize))
-         for tile in candidate_tiles(pipeline.ndim, shape)),
+        ((tile, _tile_cost(spec, shape, tile, sweeps, itemsize, backend))
+         for tile in candidate_tiles(spec.ndim, shape, backend)),
         key=lambda tc: tc[1])
     best, cost = scored[0]
     if math.isinf(cost):
         raise ValueError(
-            f"no candidate tile fits VMEM for {pipeline.name} "
-            f"sweeps={sweeps}")
+            f"no candidate tile fits {_budget_name(backend)} for "
+            f"{spec.name} sweeps={sweeps}")
     return TuneResult(best, cost, tuple(scored))
+
+
+def autotune_pipeline(pipeline, shape: tuple[int, ...], sweeps: int = 1,
+                      itemsize: int = 4,
+                      backend: str = "pallas") -> TuneResult:
+    """Best tile for a fused :class:`~repro.core.stencil.StencilPipeline`
+    chain: same candidate lists, ranked by the backend's pipeline cost
+    model (summed-halo window traffic, per-stage structured compute at
+    the exact element-layer schedule).  Memoized on the full pipeline —
+    stage order, per-stage boundary and structure all participate —
+    plus backend and calibration fingerprint."""
+    return _autotune_pipeline(pipeline, tuple(shape), sweeps, itemsize,
+                              backend, pm.calibration_fingerprint())
+
+
+@functools.lru_cache(maxsize=512)
+def _autotune_pipeline(pipeline, shape: tuple[int, ...], sweeps: int,
+                       itemsize: int, backend: str, _cal) -> TuneResult:
+    scored = sorted(
+        ((tile, _pipeline_tile_cost(pipeline, shape, tile, sweeps,
+                                    itemsize, backend))
+         for tile in candidate_tiles(pipeline.ndim, shape, backend)),
+        key=lambda tc: tc[1])
+    best, cost = scored[0]
+    if math.isinf(cost):
+        raise ValueError(
+            f"no candidate tile fits {_budget_name(backend)} for "
+            f"{pipeline.name} sweeps={sweeps}")
+    return TuneResult(best, cost, tuple(scored))
+
+
+# ---------------------------------------------------------------------------
+# Measured re-ranking + persistent on-disk cache
+# ---------------------------------------------------------------------------
+#: Directory for persisted ``autotune_measured`` results.  Unset (the
+#: default) disables persistence entirely — measured tunes stay
+#: process-local.
+TUNE_CACHE_ENV = "CASPER_TUNE_CACHE"
+
+
+@dataclasses.dataclass
+class TuneDiskCacheStats:
+    """Counters for the ``CASPER_TUNE_CACHE`` persistent cache, pinned
+    by tests exactly like ``plan.PLAN_CACHE``'s: ``hits`` served from
+    disk, ``misses`` that ran real measurements, ``stores`` written."""
+    hits: int = 0
+    misses: int = 0
+    stores: int = 0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "stores": self.stores}
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.stores = 0
+
+
+TUNE_DISK_CACHE = TuneDiskCacheStats()
+
+
+def _tune_cache_dir() -> str | None:
+    root = os.environ.get(TUNE_CACHE_ENV, "").strip()
+    return root or None
+
+
+def _tune_cache_key(spec, shape, itemsize, sweeps, backend, top_k, reps,
+                    interpret) -> str:
+    """Content key mirroring the plan cache's: the full spec repr
+    (taps + boundary + structure), grid shape, dtype width, sweeps,
+    backend, the measurement configuration and the live calibration
+    fingerprint — a calibrated measured tune never aliases an
+    uncalibrated one."""
+    payload = repr((spec, tuple(shape), int(itemsize), int(sweeps),
+                    backend, int(top_k), int(reps), interpret,
+                    pm.calibration_fingerprint()))
+    return hashlib.sha256(payload.encode()).hexdigest()[:40]
+
+
+def _tune_cache_load(key: str) -> TuneResult | None:
+    root = _tune_cache_dir()
+    if root is None:
+        return None
+    try:
+        with open(os.path.join(root, key + ".json")) as fh:
+            payload = json.load(fh)
+        table = tuple((tuple(row["tile"]), float(row["cost_s"]))
+                      for row in payload["table"])
+        return TuneResult(tuple(payload["tile"]), float(payload["cost_s"]),
+                          table, measured=True)
+    except (OSError, ValueError, KeyError, TypeError):
+        return None          # absent or corrupt entry -> re-measure
+
+
+def _tune_cache_store(key: str, result: TuneResult) -> None:
+    root = _tune_cache_dir()
+    if root is None:
+        return
+    os.makedirs(root, exist_ok=True)
+    path = os.path.join(root, key + ".json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(result.as_dict(), fh)
+    os.replace(tmp, path)    # atomic: concurrent readers never see partials
+    TUNE_DISK_CACHE.stores += 1
 
 
 def autotune_measured(spec: StencilSpec, grid, sweeps: int = 1,
                       top_k: int = 3, reps: int = 2,
-                      interpret: bool | None = None) -> TuneResult:
-    """Re-rank the ``top_k`` analytic candidates by wall clock on ``grid``."""
+                      interpret: bool | None = None,
+                      backend: str = "pallas") -> TuneResult:
+    """Re-rank the ``top_k`` analytic candidates by wall clock on
+    ``grid``.  With ``CASPER_TUNE_CACHE`` set, results persist on disk
+    across process restarts (measured tunes are the expensive ones —
+    each candidate compiles and runs)."""
     from . import engine  # local import: tune is importable without jax use
 
+    key = _tune_cache_key(spec, grid.shape, grid.dtype.itemsize, sweeps,
+                          backend, top_k, reps, interpret)
+    if _tune_cache_dir() is not None:
+        cached = _tune_cache_load(key)
+        if cached is not None:
+            TUNE_DISK_CACHE.hits += 1
+            return cached
+        TUNE_DISK_CACHE.misses += 1
+
     analytic = autotune(spec, tuple(grid.shape), sweeps=sweeps,
-                        itemsize=grid.dtype.itemsize)
+                        itemsize=grid.dtype.itemsize, backend=backend)
     finite = [(t, c) for t, c in analytic.table if math.isfinite(c)]
+    lowering = "triton" if backend == "triton" else None
     timed = []
     for tile, _ in finite[:top_k]:
         fn = functools.partial(engine.stencil_apply, spec, tile=tile,
-                               sweeps=sweeps, interpret=interpret)
+                               sweeps=sweeps, interpret=interpret,
+                               lowering=lowering)
         fn(grid).block_until_ready()            # warm up / compile
         t0 = time.perf_counter()
         for _ in range(reps):
@@ -134,4 +292,6 @@ def autotune_measured(spec: StencilSpec, grid, sweeps: int = 1,
         timed.append((tile, (time.perf_counter() - t0) / reps))
     timed.sort(key=lambda tc: tc[1])
     best, cost = timed[0]
-    return TuneResult(best, cost, tuple(timed), measured=True)
+    result = TuneResult(best, cost, tuple(timed), measured=True)
+    _tune_cache_store(key, result)
+    return result

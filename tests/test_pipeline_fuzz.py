@@ -141,7 +141,7 @@ def check_executors(pipe: StencilPipeline, sweeps: int,
 
         if f32:
             g32 = g.astype(jnp.float32)
-            for backend in ("ref", "pallas"):
+            for backend in ("ref", "pallas", "triton"):
                 plan = _plan.lower(pipe, shape, jnp.float32,
                                    backend=backend, sweeps=sweeps)
                 _assert_verified(plan)
@@ -160,7 +160,7 @@ def check_executors(pipe: StencilPipeline, sweeps: int,
                     err_msg=f"f32 {backend} slab-streamed")
             return
 
-        for backend in ("ref", "pallas"):
+        for backend in ("ref", "pallas", "triton"):
             plan = _plan.lower(pipe, shape, g.dtype, backend=backend,
                                sweeps=sweeps)
             _assert_verified(plan)
@@ -293,7 +293,7 @@ def test_fuzz_unfusable_staged_fallback(seed, n_stages):
             for s in pipe.stages:
                 want = rc.apply_stencil(s, want)
         want = np.asarray(want)
-        for backend in ("ref", "pallas"):
+        for backend in ("ref", "pallas", "triton"):
             plan = _plan.lower(pipe, g.shape, g.dtype, backend=backend)
             _assert_verified(plan)
             assert not plan.fused

@@ -7,7 +7,7 @@ decomposition, program); the cache keys on boundary + structure + dtype
 retrace-count guard (a second identical engine performs zero lowers and
 zero autotune sweeps and reuses the same jitted runner); remainder
 plans come from the cache (the old ``_build_step(r)`` re-autotune at
-trace time is gone); all four backends execute plans; and the legacy
+trace time is gone); all five backends execute plans; and the legacy
 kernel shims warn.
 """
 import warnings
@@ -116,6 +116,7 @@ def test_cache_key_includes_boundary_structure_dtype_sweeps_backend():
         lower(spec, (40, 48), jnp.float64, backend="ref", sweeps=2),
         lower(spec, (40, 48), jnp.float32, backend="ref", sweeps=3),
         lower(spec, (40, 48), jnp.float32, backend="vm", sweeps=2),
+        lower(spec, (40, 48), jnp.float32, backend="triton", sweeps=2),
         lower(spec, (48, 40), jnp.float32, backend="ref", sweeps=2),
     ]
     plans = [base] + variants
@@ -409,3 +410,34 @@ def test_new_homes_do_not_warn(rng):
         cref.apply_stencil(spec, g)
     ours = [w for w in rec if "repro.kernels" in str(w.message)]
     assert not ours, [str(w.message) for w in ours]
+
+
+# ---------------------------------------------------------------------------
+# The triton GPU lowering is a plan-executor drop-in
+# ---------------------------------------------------------------------------
+def test_triton_plan_cache_distinct_and_bit_identical(rng):
+    """``backend="triton"`` lowers to a *distinct* cached plan from the
+    pallas plan for the same workload (the backend is part of the key),
+    resolves to interpret mode on the CPU host, executes through
+    ``kernels.gpu``, and its f64 result is bit-identical to the pallas
+    plan — the two lowerings share the same kernel bodies, only the
+    ``pallas_call`` target differs."""
+    from jax.experimental import enable_x64
+    from repro.kernels import gpu
+    spec = PAPER_STENCILS["jacobi2d"]
+    with enable_x64():
+        g = jnp.asarray(rng.standard_normal((33, 47)), jnp.float64)
+        pt = lower(spec, g.shape, g.dtype, backend="triton", sweeps=2)
+        pp = lower(spec, g.shape, g.dtype, backend="pallas", sweeps=2)
+        assert pt is not pp
+        assert pt.backend == "triton" and pt.interpret is True
+        assert len(pt.tile) == spec.ndim
+        # same configuration again -> the very same cached object
+        assert lower(spec, g.shape, g.dtype, backend="triton",
+                     sweeps=2) is pt
+        want = planmod.execute(pp, g)
+        got = planmod.execute(pt, g)
+        assert bool(jnp.all(got == want))
+        assert bool(jnp.all(gpu.execute_plan(pt, g) == want))
+        with pytest.raises(ValueError, match="not a triton plan"):
+            gpu.execute_plan(pp, g)

@@ -111,6 +111,18 @@ def test_slab_matrix_pallas(boundary, sweeps, which):
     _check_streamed(spec, SHAPES[2], sweeps, iters, "pallas")
 
 
+@pytest.mark.parametrize("boundary", ("zero", "periodic"))
+@pytest.mark.parametrize("sweeps", (1, 3))
+@pytest.mark.parametrize("which", (0, 1), ids=("star", "separable"))
+def test_slab_matrix_triton(boundary, sweeps, which):
+    """The triton (interpret) lowering streams slabs bit-identically:
+    the slab executor threads the plan backend through to the kernel
+    call, so the GPU path inherits out-of-core streaming for free."""
+    spec = SPECS[2][which].with_boundary(boundary)
+    iters = 3 if sweeps == 1 else 7
+    _check_streamed(spec, SHAPES[2], sweeps, iters, "triton")
+
+
 # ---------------------------------------------------------------------------
 # Pipelines: fused chains stream; unfusable staged chains loop the slab
 # executor per fused block (needs_host_streaming)

@@ -13,6 +13,7 @@ from repro.core import (PAPER_STENCILS, CasperEngine, StencilSpec, assemble,
                         factor_taps, plan_streams)
 from repro.core import ref as cref
 from repro.kernels import engine
+from repro.kernels import gpu
 
 SHAPES = {1: (1000,), 2: (70, 130), 3: (9, 20, 150)}
 
@@ -131,11 +132,12 @@ BOUNDARIES = ("zero", "constant(0.75)", "periodic", "reflect")
 @pytest.mark.parametrize("sweeps", [1, 3])
 def test_structure_equivalence_matrix_f64_bitwise(name, boundary, sweeps,
                                                   rng):
-    """The fused pad-free Pallas engine, the jnp oracle chain and the
-    numpy oracle chain agree *bitwise* in f64 for every structure class,
-    boundary mode, rank and sweep count — they share the factored
-    compute core and its pinned accumulation order — and all stay within
-    float tolerance of the forced-dense oracle."""
+    """The fused pad-free Pallas engine, the triton (interpret)
+    lowering of the very same kernel bodies, the jnp oracle chain and
+    the numpy oracle chain agree *bitwise* in f64 for every structure
+    class, boundary mode, rank and sweep count — they share the
+    factored compute core and its pinned accumulation order — and all
+    stay within float tolerance of the forced-dense oracle."""
     from jax.experimental import enable_x64
     spec = PAPER_STENCILS[name].with_boundary(boundary)
     shape = {1: (260,), 2: (33, 47), 3: (9, 13, 21)}[spec.ndim]
@@ -144,6 +146,9 @@ def test_structure_equivalence_matrix_f64_bitwise(name, boundary, sweeps,
         got = engine.stencil_apply(spec, g, sweeps=sweeps)
         want = jax.jit(lambda x: cref.run_iterations(spec, x, sweeps))(g)
         assert bool(jnp.all(got == want)), (name, boundary)
+        got_triton = gpu.stencil_apply(spec, g, sweeps=sweeps)
+        assert bool(jnp.all(got_triton == want)), (name, boundary,
+                                                   "triton")
         gn = np.asarray(g)
         for _ in range(sweeps):
             gn = cref.apply_stencil_numpy(spec, gn)
@@ -272,10 +277,24 @@ def test_tile_cost_structure_aware():
 # ---------------------------------------------------------------------------
 # interpret=None auto-detection
 # ---------------------------------------------------------------------------
-def test_interpret_auto_detection(rng):
+def test_interpret_auto_detection(rng, monkeypatch):
     assert engine.resolve_interpret(None) == (jax.default_backend() == "cpu")
     assert engine.resolve_interpret(True) is True
     assert engine.resolve_interpret(False) is False
+    # backend-aware resolution: on the CPU host every kernel backend
+    # interprets; a TPU host must reject the triton lowering with a
+    # clear error instead of an opaque mosaic traceback, and a GPU host
+    # compiles it.
+    from repro.core import plan as _plan
+    assert _plan.resolve_interpret(None, "triton") is True   # cpu host
+    with monkeypatch.context() as mp:
+        mp.setattr(_plan.jax, "default_backend", lambda: "tpu")
+        with pytest.raises(ValueError, match="triton"):
+            _plan.resolve_interpret(None, "triton")
+        assert _plan.resolve_interpret(None, "pallas") is False
+        assert _plan.resolve_interpret(True, "triton") is True   # explicit
+        mp.setattr(_plan.jax, "default_backend", lambda: "gpu")
+        assert _plan.resolve_interpret(None, "triton") is False
     # default (None) paths run fine on CPU without passing the flag
     g = jnp.asarray(rng.standard_normal((48, 64)), jnp.float32)
     spec = PAPER_STENCILS["jacobi2d"]

@@ -3,7 +3,7 @@
 matrix as a CI gate.
 
 Every PAPER_STENCILS spec × boundary mode × structure (auto / forced
-dense) × backend (ref / pallas / vm), plus every PAPER_PIPELINES chain
+dense) × backend (ref / pallas / vm / triton), plus every PAPER_PIPELINES chain
 (native boundaries and the rebased all-periodic / all-zero variants) ×
 backend, is lowered and analyzed:
 
@@ -40,7 +40,7 @@ from repro.core.stencil import PAPER_PIPELINES, PAPER_STENCILS
 BOUNDARIES = ("zero", "constant(0.5)", "periodic", "reflect")
 SHAPES = {1: (512,), 2: (64, 128), 3: (8, 16, 128)}
 SWEEPS = (1, 2)
-BACKENDS = ("ref", "pallas", "vm")
+BACKENDS = ("ref", "pallas", "vm", "triton")
 
 
 def iter_spec_cases(fast: bool):
@@ -82,7 +82,7 @@ def iter_slab_cases(fast: bool):
     plan onto the ``"stream-from-host"`` ghost path, so the layer-1 slab
     invariants (exact cover, ``sweeps*halo`` overlap, per-slab residency)
     and the layer-2 streamed-plan skip are exercised by the CI gate.
-    Only ref/pallas stream (the vm backend never leaves core)."""
+    Only the ref and kernel backends stream (vm never leaves core)."""
     import math
     workloads = [("jacobi1d", "zero"), ("jacobi2d", "periodic"),
                  ("blur2d", "constant(0.5)"), ("star33_3d", "reflect")]
@@ -92,14 +92,14 @@ def iter_slab_cases(fast: bool):
         spec = PAPER_STENCILS[name].with_boundary(boundary)
         shape = SHAPES[spec.ndim]
         budget = math.prod(shape) * 8 // 4
-        for backend in ("ref", "pallas"):
+        for backend in ("ref", "pallas", "triton"):
             for sweeps in SWEEPS if not fast else (1,):
                 yield (f"{name}/{boundary}/slab/{backend}/t{sweeps}",
                        spec, shape, backend, sweeps, budget)
     for name, pipe in PAPER_PIPELINES.items():
         shape = (64, 128)
         budget = math.prod(shape) * 8 // 4
-        for backend in ("ref", "pallas"):
+        for backend in ("ref", "pallas", "triton"):
             yield (f"{name}/native/slab/{backend}/t1",
                    pipe, shape, backend, 1, budget)
 
